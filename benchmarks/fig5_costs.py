@@ -1,0 +1,38 @@
+"""Paper Fig. 5 reproduction: accumulated per-client cost over the 20
+FedCostAware rounds on Fed-ISIC2019."""
+from __future__ import annotations
+
+from benchmarks.table1 import ROWS, run_row
+
+
+def run():
+    row = ROWS[0]
+    res = run_row(row, "fedcostaware")
+    # cost_curve: one record per (round end, client)
+    rounds = sorted({r["round"] for r in res.cost_curve})
+    clients = sorted({r["client"] for r in res.cost_curve})
+    table = {c: {} for c in clients}
+    for rec in res.cost_curve:
+        table[rec["client"]][rec["round"]] = rec["cum_cost"]
+    return rounds, clients, table, res
+
+
+def main():
+    rounds, clients, table, res = run()
+    print("round," + ",".join(clients))
+    for r in rounds:
+        vals = [table[c].get(r, float("nan")) for c in clients]
+        print(f"{r}," + ",".join(f"{v:.4f}" for v in vals))
+    final = {c: table[c][rounds[-1]] for c in clients}
+    total = sum(final.values())
+    print(f"\n# total = ${total:.4f} (paper: $7.1740)")
+    # monotone non-decreasing curves; slowest client accrues the most
+    for c in clients:
+        seq = [table[c][r] for r in rounds if r in table[c]]
+        assert all(b >= a - 1e-9 for a, b in zip(seq, seq[1:]))
+    assert max(final, key=final.get) == clients[0], \
+        "slowest (largest-data) client should accumulate the highest cost"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Roofline report: reads the dry-run artifacts
+(benchmarks/results/dryrun*.json) and prints the per-(arch x shape x mesh)
+three-term roofline table used in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(fname="dryrun.json"):
+    path = os.path.join(RESULTS, fname)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    recs = load()
+    recs += load("dryrun_fl.json")
+    recs += load("dryrun_fl_comp.json")
+    if not recs:
+        print("no dry-run results found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    recs.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    print("arch,shape,mesh,chips,compute_s,memory_s,collective_s,"
+          "dominant,model_flops,useful_ratio,peak_fraction,compile_s")
+    for r in recs:
+        rl = r["roofline"]
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['chips']},"
+              f"{rl['compute_s']:.4g},{rl['memory_s']:.4g},"
+              f"{rl['collective_s']:.4g},{rl['dominant']},"
+              f"{rl['model_flops']:.3e},{rl['useful_ratio']:.3f},"
+              f"{rl['peak_fraction']:.3f},{r.get('compile_s', '')}")
+
+
+if __name__ == "__main__":
+    main()

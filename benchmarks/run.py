@@ -1,0 +1,55 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+report. Prints ``name,value,derived`` CSV blocks.
+
+  table1   — Table I cost comparison (4 datasets x 3 policies)
+  fig4     — client-state timeline (Fed-ISIC2019)
+  fig5     — cumulative per-client costs (Fed-ISIC2019)
+  scaling  — beyond-paper: cost savings vs client-pool size & skew
+  roofline — per (arch x shape x mesh) roofline terms from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def section(title):
+    print(f"\n{'='*72}\n== {title}\n{'='*72}")
+
+
+def main() -> None:
+    want = sys.argv[1:] or ["table1", "fig4", "fig5", "scaling",
+                        "preemption", "roofline"]
+
+    if "table1" in want:
+        section("Table I: cost & savings across datasets and policies")
+        from benchmarks import table1
+        table1.main()
+
+    if "fig4" in want:
+        section("Fig 4: client operational states over time (Fed-ISIC2019)")
+        from benchmarks import fig4_timeline
+        fig4_timeline.main()
+
+    if "fig5" in want:
+        section("Fig 5: accumulated per-client cost (Fed-ISIC2019)")
+        from benchmarks import fig5_costs
+        fig5_costs.main()
+
+    if "scaling" in want:
+        section("Beyond-paper: savings vs pool size / heterogeneity")
+        from benchmarks import scaling
+        scaling.main()
+
+    if "preemption" in want:
+        section("Beyond-paper: robustness vs spot preemption rate")
+        from benchmarks import preemption_sweep
+        preemption_sweep.main()
+
+    if "roofline" in want:
+        section("Roofline: per (arch x shape x mesh) terms from dry-run")
+        from benchmarks import roofline_report
+        roofline_report.main()
+
+
+if __name__ == "__main__":
+    main()

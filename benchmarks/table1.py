@@ -1,0 +1,120 @@
+"""Paper Table I reproduction: total cost + savings for
+(Fed-ISIC2019, AI-READI, CIFAR-10, MNIST) x (FedCostAware, Spot, On-demand).
+
+Client heterogeneity profiles are derived from the paper's own cost
+identities (documented in EXPERIMENTS.md §Repro-Table1):
+
+  makespan        = od_total / (n_clients * od_rate)
+  slowest epoch   ~ (makespan - spin_up) / n_epochs
+  busy fraction   = fca_total / spot_total
+                  -> distributes the remaining clients' epoch times
+
+The paper's Fed-ISIC sizes follow FLamby's natural institution split
+(client 1 has the largest volume — see Fig. 4); the synthetic datasets
+use the dual-Dirichlet volume skew. Rates are the paper's measured
+g5.xlarge prices per dataset row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.common.config import CloudConfig, ClientProfile, FLRunConfig, \
+    SchedulerConfig
+from repro.fl.runner import FLCloudRunner
+
+
+@dataclasses.dataclass(frozen=True)
+class Table1Row:
+    dataset: str
+    n_clients: int
+    n_epochs: int
+    od_rate: float
+    spot_rate: float
+    target: Dict[str, float]          # paper's Total Cost column
+    epoch_s: Tuple[float, ...]        # per-client warm epoch seconds
+    spin_up_s: float = 150.0          # g5.xlarge provision+boot
+
+
+ROWS = [
+    Table1Row(
+        "Fed-ISIC2019", 6, 20, 1.0080, 0.3951,
+        {"on_demand": 24.2978, "spot": 9.5239, "fedcostaware": 7.1740},
+        # natural institution split: client 0 dominates (paper Fig. 4)
+        (718.0, 523.0, 390.0, 246.0, 195.0, 133.0), 335.0),
+    Table1Row(
+        "AI-READI", 5, 15, 1.0060, 0.3946,
+        {"on_demand": 25.3805, "spot": 9.9550, "fedcostaware": 8.3300},
+        (1200.0, 1033.0, 881.0, 689.0, 395.0), 220.0),
+    Table1Row(
+        "CIFAR-10", 4, 20, 1.0080, 0.3951,
+        {"on_demand": 26.0609, "spot": 10.2150, "fedcostaware": 7.2399},
+        (1155.0, 689.0, 507.0, 334.0), 265.0),
+    Table1Row(
+        "MNIST", 3, 10, 1.0060, 0.3937,
+        {"on_demand": 6.9489, "spot": 2.7174, "fedcostaware": 2.2901},
+        (818.0, 511.0, 348.0), 160.0),
+]
+
+POLICIES = ("fedcostaware", "spot", "on_demand")
+
+
+def run_row(row: Table1Row, policy: str, seed: int = 0):
+    clients = tuple(
+        ClientProfile(f"client_{i}", mean_epoch_s=t, cold_multiplier=1.12,
+                      jitter=0.0, n_samples=int(t))
+        for i, t in enumerate(row.epoch_s))
+    # the paper's spot rate is the *cheapest-zone* price actually paid;
+    # zone means carry a ±2% spread, so scale the mean so min == rate.
+    cloud = CloudConfig(on_demand_rate=row.od_rate,
+                        spot_rate_mean=row.spot_rate / 0.98,
+                        spot_rate_sigma=0.0, spin_up_mean_s=row.spin_up_s,
+                        spin_up_sigma=0.0)
+    cfg = FLRunConfig(dataset=row.dataset, clients=clients,
+                      n_epochs=row.n_epochs, policy=policy, seed=seed)
+    return FLCloudRunner(cfg, cloud_cfg=cloud).run()
+
+
+def run() -> List[dict]:
+    out = []
+    for row in ROWS:
+        od_cost = None
+        for policy in POLICIES:
+            res = run_row(row, policy)
+            rec = {
+                "dataset": row.dataset, "n_clients": row.n_clients,
+                "n_epochs": row.n_epochs, "algorithm": policy,
+                "rate_per_hr": (row.od_rate if policy == "on_demand"
+                                else row.spot_rate),
+                "total_cost": round(res.total_cost, 4),
+                "paper_cost": row.target[policy],
+                "rel_err": round(abs(res.total_cost - row.target[policy])
+                                 / row.target[policy], 4),
+                "makespan_h": round(res.makespan_s / 3600, 3),
+            }
+            if policy == "on_demand":
+                od_cost = res.total_cost
+            out.append(rec)
+        for rec in out[-3:]:
+            if rec["algorithm"] != "on_demand":
+                rec["savings_vs_od_pct"] = round(
+                    100 * (1 - rec["total_cost"] / od_cost), 2)
+                paper_sav = 100 * (1 - rec["paper_cost"]
+                                   / ROWS[[r.dataset for r in ROWS].index(
+                                       rec["dataset"])].target["on_demand"])
+                rec["paper_savings_pct"] = round(paper_sav, 2)
+    return out
+
+
+def main():
+    print("dataset,algorithm,total_cost,paper_cost,rel_err,"
+          "savings_vs_od_pct,paper_savings_pct")
+    for r in run():
+        print(f"{r['dataset']},{r['algorithm']},{r['total_cost']},"
+              f"{r['paper_cost']},{r['rel_err']},"
+              f"{r.get('savings_vs_od_pct', '')},"
+              f"{r.get('paper_savings_pct', '')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: cost-aware federated learning in ~40 lines.
+
+Three clients with heterogeneous speeds train a real CNN under the
+FedCostAware scheduler on the simulated cloud; compares dollar cost
+against plain-spot and on-demand.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.common.config import ClientProfile, FLRunConfig
+from repro.data.partition import dual_dirichlet_partition
+from repro.data.synthetic import make_dataset, minibatches
+from repro.fl.client import FLClient
+from repro.fl.runner import FLCloudRunner
+from repro.fl.server import FederatedServer, JaxTrainerHooks
+from repro.models import cnn
+from repro.optim.optimizers import adamw
+
+# -- data: non-IID partition over 3 clients ------------------------------
+ds = make_dataset("mnist", 900, seed=0)
+parts = dual_dirichlet_partition(ds.y, 3, alpha_class=2.0, seed=0)
+
+# -- model + FL clients ---------------------------------------------------
+params, apply_fn, _ = cnn.build("small_cnn", jax.random.PRNGKey(0),
+                                ds.n_classes, 1, 28)
+clients = {}
+for i, idx in enumerate(parts):
+    def data_fn(r, idx=idx, i=i):
+        return minibatches(ds, idx, 32, seed=100 * r + i)
+    c = FLClient(f"client_{i}", apply_fn, adamw(lr=1e-3), data_fn, len(idx))
+    clients[c.name] = c
+
+# -- heterogeneous cloud profiles: client_0 is the straggler -------------
+profiles = tuple(
+    ClientProfile(f"client_{i}", mean_epoch_s=900 / (i + 1), jitter=0.0,
+                  n_samples=len(parts[i]))
+    for i in range(3))
+
+for policy in ("on_demand", "spot", "fedcostaware"):
+    server = FederatedServer(params)
+    hooks = JaxTrainerHooks(server, clients)
+    cfg = FLRunConfig(dataset="mnist", clients=profiles, n_epochs=5,
+                      policy=policy)
+    res = FLCloudRunner(cfg, hooks=hooks).run()
+    loss = server.history[-1]["mean_client_loss"]
+    print(f"{policy:14s} cost=${res.total_cost:6.3f} "
+          f"makespan={res.makespan_s/60:5.1f}min final_loss={loss:.4f}")

@@ -1,0 +1,88 @@
+"""Object store abstraction — the simulated S3 (paper Fig. 1: clients
+checkpoint to cloud storage; server & clients exchange models through it).
+
+Backends: in-memory (tests) and local filesystem (examples). Keys are
+hierarchical strings; values are bytes. Writes are atomic (temp + rename)
+so a preemption mid-write never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+from typing import Dict, List, Optional
+
+
+class ObjectStore:
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def list(self, prefix: str = "") -> List[str]:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+
+class MemoryStore(ObjectStore):
+    def __init__(self):
+        self._data: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, key, data):
+        with self._lock:
+            self._data[key] = bytes(data)
+
+    def get(self, key):
+        with self._lock:
+            return self._data.get(key)
+
+    def list(self, prefix=""):
+        with self._lock:
+            return sorted(k for k in self._data if k.startswith(prefix))
+
+    def delete(self, key):
+        with self._lock:
+            self._data.pop(key, None)
+
+
+class FileStore(ObjectStore):
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        safe = key.replace("/", "__")
+        return os.path.join(self.root, safe)
+
+    def put(self, key, data):
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=self.root)
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)          # atomic
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def get(self, key):
+        path = self._path(key)
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            return f.read()
+
+    def list(self, prefix=""):
+        safe = prefix.replace("/", "__")
+        return sorted(k.replace("__", "/") for k in os.listdir(self.root)
+                      if k.startswith(safe) and not k.startswith("tmp"))
+
+    def delete(self, key):
+        path = self._path(key)
+        if os.path.exists(path):
+            os.unlink(path)

@@ -1,0 +1,102 @@
+"""Spot / on-demand pricing across regions and availability zones.
+
+The paper (§III-A "Dynamic Resource Allocation") queries real-time spot
+prices across regions/zones and picks the cheapest. Here prices are
+simulated as per-zone piecewise-constant mean-reverting traces calibrated
+to the paper's observed g5.xlarge rates (on-demand $1.008/hr, spot
+≈ $0.3951/hr, Table I).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.common.config import CloudConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Zone:
+    name: str          # e.g. "us-east-1a"
+    region: str        # e.g. "us-east-1"
+
+
+class SpotPriceTrace:
+    """Piecewise-constant mean-reverting price process for one zone.
+
+    AWS publishes spot price updates at irregular intervals (minutes to
+    hours); we model hourly steps of an OU-like process clipped to
+    [0.25, 1.0] x on-demand.
+    """
+
+    def __init__(self, mean: float, sigma: float, on_demand: float,
+                 seed: int, step_s: float = 3600.0, horizon_s: float = 7 * 86400.0,
+                 reversion: float = 0.2):
+        rng = np.random.RandomState(seed)
+        n = int(horizon_s / step_s) + 2
+        prices = np.empty(n)
+        p = mean + rng.randn() * sigma
+        for i in range(n):
+            prices[i] = np.clip(p, 0.25 * on_demand, 1.0 * on_demand)
+            p = p + reversion * (mean - p) + rng.randn() * sigma
+        self._step = step_s
+        self._prices = prices
+
+    def price(self, t: float) -> float:
+        i = min(int(t / self._step), len(self._prices) - 1)
+        return float(self._prices[i])
+
+    def integral(self, t0: float, t1: float) -> float:
+        """Integral of price over [t0, t1] in $·s/hr (divide by 3600 for $)."""
+        if t1 <= t0:
+            return 0.0
+        total = 0.0
+        t = t0
+        while t < t1:
+            step_end = (math.floor(t / self._step) + 1) * self._step
+            seg_end = min(step_end, t1)
+            total += self.price(t) * (seg_end - t)
+            t = seg_end
+        return total
+
+
+class PriceBook:
+    """All zones' prices + on-demand rate; cheapest-zone queries."""
+
+    def __init__(self, cfg: CloudConfig, seed: int = 0):
+        self.cfg = cfg
+        self.zones: List[Zone] = []
+        self._traces: Dict[str, SpotPriceTrace] = {}
+        regions = ("us-east-1", "us-east-2", "us-west-2", "eu-west-1")
+        for i in range(cfg.n_zones):
+            region = regions[i % len(regions)]
+            z = Zone(f"{region}{chr(ord('a') + i // len(regions))}", region)
+            self.zones.append(z)
+            # zone-specific mean wiggle so zones genuinely differ
+            mean = cfg.spot_rate_mean * (1.0 + 0.02 * ((i % 3) - 1))
+            self._traces[z.name] = SpotPriceTrace(
+                mean, cfg.spot_rate_sigma, cfg.on_demand_rate, seed=seed + i)
+
+    def spot_price(self, zone: str, t: float) -> float:
+        return self._traces[zone].price(t)
+
+    def on_demand_price(self, zone: str, t: float) -> float:
+        return self.cfg.on_demand_rate
+
+    def price(self, zone: str, t: float, on_demand: bool) -> float:
+        return (self.on_demand_price(zone, t) if on_demand
+                else self.spot_price(zone, t))
+
+    def cheapest_zone(self, t: float,
+                      allowed: Optional[List[str]] = None) -> Tuple[str, float]:
+        names = allowed or [z.name for z in self.zones]
+        best = min(names, key=lambda z: self.spot_price(z, t))
+        return best, self.spot_price(best, t)
+
+    def cost(self, zone: str, t0: float, t1: float, on_demand: bool) -> float:
+        """Dollars accrued over [t0, t1] (per-second billing)."""
+        if on_demand:
+            return self.cfg.on_demand_rate * max(t1 - t0, 0.0) / 3600.0
+        return self._traces[zone].integral(t0, t1) / 3600.0

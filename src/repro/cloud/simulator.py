@@ -1,0 +1,178 @@
+"""Discrete-event cloud simulator: instance lifecycles, spin-up delays,
+Poisson preemption, and per-second billing against the PriceBook.
+
+This is the stand-in for AWS EC2 + the custom Ray node launcher in the
+paper. The FedCostAware scheduler interacts with it through exactly the
+operations the paper's scheduler uses: request instance (in a chosen
+zone), terminate instance, observe ready/preempt events, read accrued
+cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.common.config import CloudConfig
+from repro.cloud.pricing import PriceBook
+
+# Instance states
+REQUESTED, SPINNING_UP, RUNNING, TERMINATED, PREEMPTED = (
+    "requested", "spinning_up", "running", "terminated", "preempted")
+
+
+@dataclasses.dataclass
+class Instance:
+    iid: int
+    client: str
+    zone: str
+    on_demand: bool
+    t_request: float
+    t_ready: Optional[float] = None
+    t_end: Optional[float] = None
+    state: str = SPINNING_UP
+    cost: float = 0.0          # finalized at termination/preemption
+    _billing_from: Optional[float] = None
+
+
+class CloudSimulator:
+    """Event-driven cloud with billing.
+
+    Events are (time, seq, callback) on a heap; callbacks may schedule
+    further events. `run_until_idle` drains the heap.
+    """
+
+    def __init__(self, cfg: CloudConfig, prices: Optional[PriceBook] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.prices = prices or PriceBook(cfg, seed=seed)
+        self.now = 0.0
+        self._heap: List = []
+        self._seq = itertools.count()
+        self._rng = np.random.RandomState(seed + 17)
+        self._instances: Dict[int, Instance] = {}
+        self._iid = itertools.count(1)
+        self.event_log: List[dict] = []
+
+    # ------------------------------------------------------------------
+    # Event engine.
+    # ------------------------------------------------------------------
+    def schedule(self, t: float, fn: Callable[[], None]):
+        assert t >= self.now - 1e-9, (t, self.now)
+        heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn))
+
+    def schedule_in(self, delay: float, fn: Callable[[], None]):
+        self.schedule(self.now + max(delay, 0.0), fn)
+
+    def run_until_idle(self, t_max: float = math.inf):
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            if t > t_max:
+                heapq.heappush(self._heap, (t, next(self._seq), fn))
+                return
+            self.now = max(self.now, t)
+            fn()
+
+    # ------------------------------------------------------------------
+    # Instance lifecycle (the paper's Ray-autoscaler custom API analogue).
+    # ------------------------------------------------------------------
+    def sample_spin_up(self) -> float:
+        mu = math.log(self.cfg.spin_up_mean_s)
+        return float(np.exp(mu + self._rng.randn() * self.cfg.spin_up_sigma))
+
+    def request_instance(self, client: str, zone: Optional[str] = None,
+                         on_demand: bool = False,
+                         on_ready: Optional[Callable[["Instance"], None]] = None,
+                         on_preempt: Optional[Callable[["Instance"], None]] = None,
+                         ) -> Instance:
+        if zone is None:
+            zone, _ = self.prices.cheapest_zone(self.now)
+        inst = Instance(next(self._iid), client, zone, on_demand, self.now)
+        self._instances[inst.iid] = inst
+        spin = self.sample_spin_up()
+        self._log("request", inst)
+
+        def ready():
+            if inst.state != SPINNING_UP:        # terminated while spinning
+                return
+            inst.state = RUNNING
+            inst.t_ready = self.now
+            inst._billing_from = self.now
+            self._log("ready", inst)
+            if not inst.on_demand and self.cfg.preemption_rate_per_hr > 0:
+                self._schedule_preemption(inst, on_preempt)
+            if on_ready:
+                on_ready(inst)
+
+        self.schedule_in(spin, ready)
+        return inst
+
+    def _schedule_preemption(self, inst: Instance, on_preempt):
+        rate = self.cfg.preemption_rate_per_hr / 3600.0
+        delay = float(self._rng.exponential(1.0 / rate))
+
+        def preempt():
+            if inst.state != RUNNING:
+                return
+            self._finalize_billing(inst)
+            inst.state = PREEMPTED
+            inst.t_end = self.now
+            self._log("preempt", inst)
+            if on_preempt:
+                on_preempt(inst)
+
+        self.schedule_in(delay, preempt)
+
+    def terminate(self, inst: Instance):
+        """Custom terminate-specific-node API (paper §III-C)."""
+        if inst.state in (TERMINATED, PREEMPTED):
+            return
+        if inst.state == RUNNING:
+            self._finalize_billing(inst)
+        inst.state = TERMINATED
+        inst.t_end = self.now
+        self._log("terminate", inst)
+
+    # ------------------------------------------------------------------
+    # Billing.
+    # ------------------------------------------------------------------
+    def _finalize_billing(self, inst: Instance):
+        t0 = inst._billing_from
+        if t0 is None:
+            return
+        t1 = self.now
+        billed = max(t1 - t0, self.cfg.min_billing_s if not inst.on_demand
+                     else 0.0)
+        inst.cost += self.prices.cost(inst.zone, t0, t0 + billed,
+                                      inst.on_demand)
+        inst._billing_from = None
+
+    def accrued_cost(self, inst: Instance) -> float:
+        """Cost so far including the open billing segment."""
+        c = inst.cost
+        if inst._billing_from is not None:
+            c += self.prices.cost(inst.zone, inst._billing_from, self.now,
+                                  inst.on_demand)
+        return c
+
+    def client_cost(self, client: str) -> float:
+        return sum(self.accrued_cost(i) for i in self._instances.values()
+                   if i.client == client)
+
+    def total_cost(self) -> float:
+        return sum(self.accrued_cost(i) for i in self._instances.values())
+
+    def instances_of(self, client: str) -> List[Instance]:
+        return [i for i in self._instances.values() if i.client == client]
+
+    # ------------------------------------------------------------------
+    def _log(self, kind: str, inst: Instance):
+        self.event_log.append({
+            "t": self.now, "kind": kind, "client": inst.client,
+            "iid": inst.iid, "zone": inst.zone,
+            "on_demand": inst.on_demand,
+        })

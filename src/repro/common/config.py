@@ -1,0 +1,255 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the paper's
+own FL experiments additionally use ``FLRunConfig`` + ``CloudConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Layer kinds used in block patterns.
+# ---------------------------------------------------------------------------
+ATTN = "attn"            # global self attention (GQA / MHA)
+LOCAL_ATTN = "local_attn"  # sliding-window self attention
+CROSS_ATTN = "cross_attn"  # cross attention to (stub) image embeddings
+MAMBA2 = "mamba2"        # SSD state-space layer
+RGLRU = "rglru"          # Griffin recurrent block (RG-LRU)
+
+SUPPORTED_KINDS = (ATTN, LOCAL_ATTN, CROSS_ATTN, MAMBA2, RGLRU)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden dim
+    capacity_factor: float = 1.25
+    group_size: int = 512          # tokens per dispatch group (GShard style)
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD hyper-parameters."""
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    n_groups: int = 1
+    chunk_size: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    a_init_range: Tuple[float, float] = (1.0, 16.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    """Griffin / RecurrentGemma recurrent-block hyper-parameters."""
+    lru_width: Optional[int] = None   # defaults to d_model
+    conv_width: int = 4
+    c_constant: float = 8.0           # the fixed `c` exponent scale
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense|ssm|hybrid|moe|vlm|audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None     # default d_model // num_heads
+    # Block pattern. A model is `num_layers` layers tiled by `pattern`;
+    # remainder layers (num_layers % len(pattern)) form an explicit tail
+    # taking the pattern prefix.
+    pattern: Tuple[str, ...] = (ATTN,)
+    # attention
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    window_size: int = 2048            # for local_attn layers
+    logit_softcap: Optional[float] = None
+    # mlp
+    mlp_kind: str = "swiglu"           # swiglu|gelu
+    # optional sub-configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # vlm / audio frontends (stub): number of conditioning tokens fed to
+    # cross-attention layers (vlm) or raw frame-embedding inputs (audio).
+    n_cond_tokens: int = 0
+    # misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    grad_accum: int = 1                # microbatches per train step
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    use_pallas: bool = False           # TPU path; dry-run/CPU uses refs
+    attn_chunk: int = 1024             # query-chunk for online-softmax attn
+    # per-arch logical->mesh rule overrides (e.g. granite's 40 experts do
+    # not divide a 16-way axis: shard the expert FFN dim instead)
+    sharding_overrides: Optional[Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...]] = None
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        for k in self.pattern:
+            if k not in SUPPORTED_KINDS:
+                raise ValueError(f"unknown layer kind {k!r}")
+        if self.family == "moe" and self.moe is None:
+            raise ValueError("moe family requires MoEConfig")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def n_super(self) -> int:
+        """Number of full pattern repetitions (scanned)."""
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def tail_pattern(self) -> Tuple[str, ...]:
+        """Remainder layers appended after the scanned super-blocks."""
+        return self.pattern[: self.num_layers % len(self.pattern)]
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True when no layer performs global attention (long_500k eligible)."""
+        full = set(self.pattern + self.tail_pattern)
+        return ATTN not in full and CROSS_ATTN not in full
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init_params; used for 6ND)."""
+        d, dff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        counts = {}
+        counts[ATTN] = counts[LOCAL_ATTN] = (
+            d * (nq * hd) + 2 * d * (nkv * hd) + (nq * hd) * d
+            + (2 * d)  # 2 rmsnorm scales (pre-attn + pre-mlp share layer)
+        )
+        counts[CROSS_ATTN] = counts[ATTN]
+        if self.qkv_bias:
+            counts[ATTN] += nq * hd + 2 * nkv * hd
+            counts[LOCAL_ATTN] = counts[CROSS_ATTN] = counts[ATTN]
+        if self.moe is not None:
+            e, eff = self.moe.num_experts, self.moe.d_ff
+            mlp = d * e + e * (3 * d * eff if self.mlp_kind == "swiglu" else 2 * d * eff)
+        else:
+            mlp = 3 * d * dff if self.mlp_kind == "swiglu" else 2 * d * dff
+        # attention-kind layers carry the mlp too (parallel structure:
+        # every non-ssm/rglru layer = attn + mlp).
+        for k in (ATTN, LOCAL_ATTN, CROSS_ATTN):
+            counts[k] += mlp
+        if self.ssm is not None:
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            conv_dim = d_in + 2 * s.n_groups * s.d_state
+            counts[MAMBA2] = (
+                d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)  # in_proj
+                + conv_dim * s.conv_width + conv_dim                    # conv1d + bias
+                + 3 * nheads                                            # A_log, dt_bias, D
+                + d_in                                                  # gated norm
+                + d_in * d + d                                          # out_proj + norm
+            )
+        if self.rglru is not None:
+            w = self.rglru.lru_width or d
+            counts[RGLRU] = (
+                2 * d * w            # two input branches
+                + w * self.rglru.conv_width + w   # temporal conv + bias
+                + 2 * w * w // 1     # RG-LRU input/recurrence gates (diag-block)
+                + 2 * w              # gate biases
+                + w                  # Lambda
+                + w * d              # out proj
+                + d                  # pre-norm
+            )
+        total = v * d + d            # embed + final norm
+        if not self.tie_embeddings:
+            total += d * v
+        layers = list(self.pattern) * self.n_super + list(self.tail_pattern)
+        for k in layers:
+            total += counts[k]
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the assigned 4-shape set).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# FL / cloud configuration (the paper's experiments).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ClientProfile:
+    """Per-client heterogeneity profile used by the simulator."""
+    name: str
+    mean_epoch_s: float            # warm per-epoch wall time
+    cold_multiplier: float = 1.15  # first-epoch-on-fresh-instance slowdown
+    jitter: float = 0.03           # lognormal sigma on epoch time
+    budget: float = float("inf")   # USD
+    n_samples: int = 1             # FedAvg weight
+    zone: Optional[str] = None     # pinned zone, else cheapest
+    join_round: int = 0            # elastic scaling: round the client joins
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudConfig:
+    on_demand_rate: float = 1.008        # $/hr g5.xlarge (paper Table I)
+    spot_rate_mean: float = 0.3951       # $/hr
+    spot_rate_sigma: float = 0.004       # zone-to-zone / temporal wiggle
+    n_zones: int = 4
+    spin_up_mean_s: float = 150.0        # instance provisioning + boot
+    spin_up_sigma: float = 0.10
+    preemption_rate_per_hr: float = 0.0  # paper observed none; configurable
+    billing_granularity_s: float = 1.0   # per-second billing
+    min_billing_s: float = 60.0          # AWS bills min 60s for spot
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """FedCostAware knobs (paper §III)."""
+    ema_alpha: float = 0.3          # EMA weight on the newest observation
+    t_threshold_s: float = 120.0    # min net idle saving to justify a stop
+    t_buffer_s: float = 45.0        # pre-warm safety buffer
+    calibration_rounds: int = 2     # round1=cold, round2=warm
+    checkpoint_every_s: float = 60.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FLRunConfig:
+    dataset: str
+    clients: Tuple[ClientProfile, ...]
+    n_epochs: int                   # global FL rounds (1 local epoch each)
+    policy: str = "fedcostaware"    # on_demand | spot | fedcostaware
+    algorithm: str = "fedavg"       # fedavg | fedprox | fedavgm
+    fedprox_mu: float = 0.01
+    server_momentum: float = 0.9
+    local_steps: Optional[int] = None  # mesh-FL: steps per round
+    seed: int = 0

@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device memory is allocated: the dry-run lowers and compiles against
+these abstract values only.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, SHAPES, ShapeConfig
+from repro.models import lm
+
+
+def _tok_struct(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.family == "audio":
+        # EnCodec frontend stub: precomputed frame embeddings
+        return jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                    cfg.activation_dtype)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Returns the kwargs pytree for the step function of `shape.kind`."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _tok_struct(cfg, B, S),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["cond"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_cond_tokens, cfg.d_model), cfg.activation_dtype)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": _tok_struct(cfg, B, S)}
+        if cfg.family == "vlm":
+            out["cond"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_cond_tokens, cfg.d_model), cfg.activation_dtype)
+        return out
+    if shape.kind == "decode":
+        return {
+            "tokens": _tok_struct(cfg, B, 1),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cache": lm.abstract_cache(cfg, B, S),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,44 @@
+"""Scheduling policies compared in the paper's Table I.
+
+  on_demand     — on-demand instances, kept running for the whole job.
+  spot          — spot instances, kept running for the whole job
+                  (fault-tolerant but no lifecycle management).
+  fedcostaware  — spot instances + the FedCostAware scheduler
+                  (terminate idle, pre-warm, budgets, §III).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.common.config import SchedulerConfig
+from repro.core.budget import BudgetLedger
+from repro.core.estimator import TimeEstimator
+from repro.core.scheduler import FedCostAwareScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    on_demand: bool              # instance market
+    manage_lifecycle: bool       # terminate-idle + pre-warm
+    enforce_budgets: bool
+    pick_cheapest_zone: bool
+
+
+POLICIES = {
+    "on_demand": Policy("on_demand", True, False, False, False),
+    "spot": Policy("spot", False, False, False, True),
+    "fedcostaware": Policy("fedcostaware", False, True, True, True),
+}
+
+
+def get_policy(name: str) -> Policy:
+    return POLICIES[name]
+
+
+def make_scheduler(policy: Policy, sched_cfg: SchedulerConfig,
+                   spin_up_prior: float = 150.0) -> FedCostAwareScheduler:
+    est = TimeEstimator(sched_cfg.ema_alpha, spin_up_prior)
+    ledger = BudgetLedger()
+    return FedCostAwareScheduler(sched_cfg, est, ledger)

@@ -1,0 +1,70 @@
+"""Synchronous FL aggregation algorithms.
+
+The paper deliberately keeps the *synchronous* protocol (§I) — FedCostAware
+is an orthogonal, system-level optimization — so the algorithms here are
+the standard synchronous family:
+
+  fedavg   — sample-count weighted parameter average (McMahan et al.)
+  fedprox  — fedavg aggregation + proximal term in the client loss
+  fedavgm  — fedavg + server momentum on the update direction
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_average(param_list: Sequence, weights: Sequence[float]):
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def avg(*leaves):
+        acc = sum(wi * leaf.astype(jnp.float32)
+                  for wi, leaf in zip(w, leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *param_list)
+
+
+def fedprox_penalty(params, global_params, mu: float):
+    sq = sum(jnp.sum(jnp.square(p.astype(jnp.float32)
+                                - g.astype(jnp.float32)))
+             for p, g in zip(jax.tree.leaves(params),
+                             jax.tree.leaves(global_params)))
+    return 0.5 * mu * sq
+
+
+class ServerState:
+    """Holds the global model + algorithm-specific server state."""
+
+    def __init__(self, params, algorithm: str = "fedavg",
+                 server_momentum: float = 0.9, server_lr: float = 1.0):
+        self.params = params
+        self.algorithm = algorithm
+        self.server_momentum = server_momentum
+        self.server_lr = server_lr
+        self._velocity = None
+
+    def aggregate(self, client_params: Sequence, weights: Sequence[float]):
+        new = weighted_average(client_params, weights)
+        if self.algorithm in ("fedavg", "fedprox"):
+            self.params = new
+            return self.params
+        if self.algorithm == "fedavgm":
+            delta = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                self.params, new)
+            if self._velocity is None:
+                self._velocity = delta
+            else:
+                self._velocity = jax.tree.map(
+                    lambda v, d: self.server_momentum * v + d,
+                    self._velocity, delta)
+            self.params = jax.tree.map(
+                lambda p, v: (p.astype(jnp.float32)
+                              - self.server_lr * v).astype(p.dtype),
+                self.params, self._velocity)
+            return self.params
+        raise ValueError(self.algorithm)

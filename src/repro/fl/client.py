@@ -1,0 +1,101 @@
+"""FL client: owns a local dataset shard and a jitted local-train step.
+
+The client periodically checkpoints its TrainState to the (simulated)
+cloud object store — the paper's fault-tolerance mechanism (§III-D) — and
+can resume a local epoch from the latest checkpoint after preemption.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.algorithms import fedprox_penalty
+from repro.optim.optimizers import Optimizer
+from repro.checkpoint.ckpt import Checkpointer
+
+
+@dataclasses.dataclass
+class LocalMetrics:
+    loss: float
+    n_batches: int
+    n_samples: int
+
+
+class FLClient:
+    def __init__(self, name: str, apply_fn: Callable, optimizer: Optimizer,
+                 data_fn: Callable[[int], Iterator[Tuple[np.ndarray, np.ndarray]]],
+                 n_samples: int,
+                 algorithm: str = "fedavg", fedprox_mu: float = 0.01,
+                 checkpointer: Optional[Checkpointer] = None,
+                 checkpoint_every: int = 10):
+        self.name = name
+        self.apply_fn = apply_fn
+        self.opt = optimizer
+        self.data_fn = data_fn
+        self.n_samples = n_samples
+        self.algorithm = algorithm
+        self.mu = fedprox_mu
+        self.ckpt = checkpointer
+        self.checkpoint_every = checkpoint_every
+        self._step = self._build_step()
+
+    def _build_step(self):
+        def loss_fn(params, x, y, global_params):
+            logits = self.apply_fn(params, x)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+            if self.algorithm == "fedprox":
+                ce = ce + fedprox_penalty(params, global_params, self.mu)
+            return ce
+
+        @jax.jit
+        def step(params, opt_state, x, y, global_params):
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, x, y, global_params)
+            params, opt_state = self.opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return step
+
+    # ------------------------------------------------------------------
+    def train_epoch(self, global_params, round_idx: int,
+                    resume_from_batch: int = 0):
+        """One local epoch from `global_params`; returns (params, metrics).
+
+        Checkpoints every `checkpoint_every` batches; `resume_from_batch`
+        restarts mid-epoch after a (simulated) preemption.
+        """
+        params = global_params
+        opt_state = self.opt.init(params)
+        start = 0
+        if resume_from_batch > 0 and self.ckpt is not None:
+            template = {"params": params, "opt_state": opt_state, "batch": 0}
+            saved = self.ckpt.restore(self._key(round_idx), template=template)
+            if saved is not None:
+                params, opt_state = saved["params"], saved["opt_state"]
+                start = int(saved["batch"])
+        losses = []
+        nb = 0
+        for bi, (x, y) in enumerate(self.data_fn(round_idx)):
+            if bi < start:
+                continue
+            params, opt_state, loss = self._step(
+                params, opt_state, jnp.asarray(x), jnp.asarray(y),
+                global_params)
+            losses.append(float(loss))
+            nb += 1
+            if self.ckpt is not None and (bi + 1) % self.checkpoint_every == 0:
+                self.ckpt.save(self._key(round_idx), {
+                    "params": params, "opt_state": opt_state,
+                    "batch": bi + 1})
+        metrics = LocalMetrics(
+            float(np.mean(losses)) if losses else float("nan"),
+            nb, self.n_samples)
+        return params, metrics
+
+    def _key(self, round_idx: int) -> str:
+        return f"client={self.name}/round={round_idx}"

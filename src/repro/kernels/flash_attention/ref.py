@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, softcap=None):
+    """q: (BN, S, H); k, v: (BN, T, H). Naive fp32 softmax attention."""
+    BN, S, H = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(H)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bst,bth->bsh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernels: per-block int8 symmetric (de)quantization.
+
+Used by the compressed cross-pod FedAvg collective (repro.fl.mesh_fl):
+client deltas are quantized to int8 + one f32 scale per block before the
+ring collective-permute, cutting cross-pod ICI traffic ~4x vs f32 (2x vs
+bf16) — the beyond-paper distributed-optimization trick.
+
+Grid: one program per block row; each step loads a (1, BLOCK) tile into
+VMEM, reduces |max|, scales, rounds. BLOCK=2048 keeps tiles lane-aligned
+(2048 = 16 x 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[0].astype(jnp.float32)                 # (BLOCK,)
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q_ref[0] = q.astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[0] = (q_ref[0].astype(jnp.float32)
+                * s_ref[0, 0]).astype(x_ref.dtype)
+
+
+def quantize_blocks(x2d, *, interpret=False):
+    """x2d: (nb, BLOCK) -> (int8 (nb, BLOCK), f32 scales (nb, 1))."""
+    nb, block = x2d.shape
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d)
+
+
+def dequantize_blocks(q2d, scales, out_dtype=jnp.float32, *,
+                      interpret=False):
+    nb, block = q2d.shape
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), out_dtype),
+        interpret=interpret,
+    )(q2d, scales)

@@ -1,0 +1,50 @@
+"""Jitted wrappers: quantize/dequantize arbitrary-shaped tensors by
+flattening to padded (nb, BLOCK) rows."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grad_quant import kernel as K
+from repro.kernels.grad_quant import ref as R
+
+BLOCK = 2048
+
+
+def _pad_rows(x):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = max((n + BLOCK - 1) // BLOCK, 1)
+    flat = jnp.pad(flat, (0, nb * BLOCK - n))
+    return flat.reshape(nb, BLOCK), n
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quantize(x, use_pallas=False, interpret=None):
+    """x: any shape -> (q int8 (nb,BLOCK), scales (nb,1), meta n)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x2d, n = _pad_rows(x)
+    if use_pallas:
+        q, s = K.quantize_blocks(x2d, interpret=interpret)
+    else:
+        q, s = R.quantize_blocks_ref(x2d)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "use_pallas",
+                                             "interpret"))
+def dequantize(q, scales, shape, dtype=jnp.float32, use_pallas=False,
+               interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_pallas:
+        x2d = K.dequantize_blocks(q, scales, dtype, interpret=interpret)
+    else:
+        x2d = R.dequantize_blocks_ref(q, scales, dtype)
+    n = 1
+    for d in shape:
+        n *= d
+    return x2d.reshape(-1)[:n].reshape(shape)

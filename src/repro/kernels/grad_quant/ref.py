@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for per-block int8 quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_blocks_ref(x2d):
+    xf = x2d.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf), axis=1, keepdims=True), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_blocks_ref(q2d, scales, out_dtype=jnp.float32):
+    return (q2d.astype(jnp.float32) * scales).astype(out_dtype)

@@ -1,0 +1,17 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_scan_b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w",
+                                             "interpret"))
+def rglru_scan(log_a, b, *, chunk=128, block_w=128, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rglru_scan_b(log_a, b, chunk=chunk, block_w=block_w,
+                        interpret=interpret)

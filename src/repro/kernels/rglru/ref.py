@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: associative-scan linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a, b):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t  over axis 1. (B,S,W)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(
+        combine, (a, b.astype(jnp.float32)), axis=1)
+    return h.astype(b.dtype)

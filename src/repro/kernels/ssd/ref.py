@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the SSD kernel: repro.models.ssm.ssd_reference."""
+from repro.models.ssm import ssd_reference  # noqa: F401

@@ -1,0 +1,183 @@
+"""Jittable step functions (train / prefill / decode) with their sharding
+trees — the programs the dry-run lowers and the drivers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.optim import optimizers
+from repro.sharding import rules as R
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees.
+# ---------------------------------------------------------------------------
+def param_shardings(cfg, rules, mesh):
+    return R.tree_shardings(lm.logical_axes(cfg), rules, mesh,
+                            lm.abstract_params(cfg))
+
+
+def opt_shardings(cfg, rules, mesh):
+    pshard = param_shardings(cfg, rules, mesh)
+    scalar = NamedSharding(mesh, P())
+    return optimizers.OptState(step=scalar, mu=pshard, nu=pshard)
+
+
+def batch_shardings(cfg, rules, mesh, kind: str, shape=None):
+    tok_axes = (("batch", "seq", "embed_act") if cfg.family == "audio"
+                else ("batch", "seq"))
+    B = shape.global_batch if shape is not None else None
+    S = shape.seq_len if shape is not None else None
+    d = cfg.d_model
+
+    def rs(axes, shp):
+        return R.resolve_sharding(axes, rules, mesh,
+                                  shp if shape is not None else None)
+
+    tok_shape = (B, S, d) if cfg.family == "audio" else (B, S)
+    if kind == "train":
+        b = {"tokens": rs(tok_axes, tok_shape),
+             "labels": rs(("batch", "seq"), (B, S))}
+        if cfg.family == "vlm":
+            b["cond"] = rs(("batch", "cond", "embed_act"),
+                           (B, cfg.n_cond_tokens, d))
+        return {"batch": b}
+    if kind == "prefill":
+        out = {"tokens": rs(tok_axes, tok_shape)}
+        if cfg.family == "vlm":
+            out["cond"] = rs(("batch", "cond", "embed_act"),
+                             (B, cfg.n_cond_tokens, d))
+        return out
+    if kind == "decode":
+        tok_dec = (("batch", None, "embed_act") if cfg.family == "audio"
+                   else ("batch", None))
+        tok_dec_shape = (B, 1, d) if cfg.family == "audio" else (B, 1)
+        cache_abs = (lm.abstract_cache(cfg, B, S)
+                     if shape is not None else None)
+        return {
+            "tokens": rs(tok_dec, tok_dec_shape),
+            "pos": rs(("batch",), (B,)),
+            "cache": R.tree_shardings(lm.cache_logical_axes(cfg), rules,
+                                      mesh, cache_abs),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Step builders.
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                    rules: Optional[dict] = None, lr: float = 3e-4):
+    """Train step with optional gradient accumulation (`cfg.grad_accum`
+    microbatches scanned per step — activation memory scales ~1/accum,
+    required to fit the >=100B configs in 16GB/chip HBM)."""
+    shard = R.ShardingCtx(mesh, rules)
+    opt = optimizers.adamw(lr=lr, weight_decay=0.1)
+    accum = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(p, cfg, batch, shard=shard))(params)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+
+            def mstep(g_acc, mb):
+                l, g = jax.value_and_grad(
+                    lambda p: lm.loss_fn(p, cfg, mb, shard=shard))(params)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                return g_acc, l
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(mstep, g0, micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = jnp.mean(losses)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, rules=None):
+    shard = R.ShardingCtx(mesh, rules)
+
+    def prefill_step(params, tokens, cond=None):
+        logits, _ = lm.forward(params, cfg, tokens, cond=cond, shard=shard)
+        # serving returns next-token distribution of the last position
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None, rules=None):
+    shard = R.ShardingCtx(mesh, rules)
+
+    def serve_step(params, tokens, pos, cache):
+        logits, new_cache = lm.decode_step(params, cfg, tokens, pos, cache,
+                                           shard=shard)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_tok, new_cache
+
+    return serve_step
+
+
+def jit_step_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 rule_overrides: Optional[dict] = None,
+                 donate: bool = True):
+    """Build the jitted (but not yet lowered) step + its arg shardings."""
+    kind = shape.kind
+    # per-arch overrides target the training layout (e.g. phi3's ZeRO-3
+    # rules); prefill/decode keep the serving rule sets.
+    overrides = dict(cfg.sharding_overrides or ()) if kind == "train" \
+        else {}
+    if rule_overrides:
+        overrides.update(rule_overrides)
+    rules = R.make_rules(kind, overrides)
+    pshard = param_shardings(cfg, rules, mesh)
+    bshard = batch_shardings(cfg, rules, mesh, kind, shape)
+
+    if kind == "train":
+        step, opt = make_train_step(cfg, mesh, rules)
+        oshard = opt_shardings(cfg, rules, mesh)
+        in_shardings = (pshard, oshard, bshard["batch"])
+        out_shardings = (pshard, oshard, NamedSharding(mesh, P()))
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=(0, 1) if donate else ())
+        return jitted, in_shardings
+
+    if kind == "prefill":
+        step = make_prefill_step(cfg, mesh, rules)
+        vocab_out = R.resolve_sharding(("batch", "vocab"), rules, mesh,
+                                       (shape.global_batch,
+                                        cfg.vocab_size))
+        names = ["tokens"] + (["cond"] if cfg.family == "vlm" else [])
+        in_shardings = tuple([pshard] + [bshard[n] for n in names])
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         out_shardings=vocab_out)
+        return jitted, in_shardings
+
+    if kind == "decode":
+        step = make_decode_step(cfg, mesh, rules)
+        in_shardings = (pshard, bshard["tokens"], bshard["pos"],
+                        bshard["cache"])
+        out_shardings = (R.resolve_sharding(("batch",), rules, mesh,
+                                            (shape.global_batch,)),
+                         bshard["cache"])
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=(3,) if donate else ())
+        return jitted, in_shardings
+
+    raise ValueError(kind)

@@ -1,0 +1,242 @@
+"""Vision models for the paper's own FL experiments (Table I):
+
+  MNIST        -> two-layer CNN          (paper §IV-A)
+  CIFAR-10     -> ResNet-18
+  AI-READI     -> ResNet-50
+  Fed-ISIC2019 -> EfficientNet-lite (depthwise-separable MBConv stack; the
+                  paper uses FLamby's EfficientNet default)
+
+Pure-JAX, param pytrees, NHWC. These are the models the FL clients
+actually train end-to-end on CPU in the examples/benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _conv_init(key, shape):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2 / fan_in)
+
+
+def _dense_init(key, shape):
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(shape[0])
+
+
+def conv2d(x, w, stride=1, groups=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def batch_norm(x, p, eps=1e-5):
+    # inference-style norm over batch+spatial (no running stats — FL clients
+    # train short local epochs; the paper's models use standard BN, we use
+    # batch statistics which is equivalent in training mode).
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _bn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Two-layer CNN (MNIST).
+# ---------------------------------------------------------------------------
+def init_small_cnn(key, n_classes=10, in_ch=1):
+    k = jax.random.split(key, 4)
+    return {
+        "c1": _conv_init(k[0], (5, 5, in_ch, 32)),
+        "c2": _conv_init(k[1], (5, 5, 32, 64)),
+        "fc1": _dense_init(k[2], (64 * 7 * 7, 128)),
+        "fc2": _dense_init(k[3], (128, n_classes)),
+    }
+
+
+def small_cnn(p, x):
+    x = jax.nn.relu(conv2d(x, p["c1"]))
+    x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                          "VALID")
+    x = jax.nn.relu(conv2d(x, p["c2"]))
+    x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                          "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ p["fc1"])
+    return x @ p["fc2"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet (18 / 50).
+# ---------------------------------------------------------------------------
+def _init_basic_block(key, cin, cout, stride):
+    k = jax.random.split(key, 3)
+    p = {
+        "c1": _conv_init(k[0], (3, 3, cin, cout)), "bn1": _bn_params(cout),
+        "c2": _conv_init(k[1], (3, 3, cout, cout)), "bn2": _bn_params(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(k[2], (1, 1, cin, cout))
+        p["bnp"] = _bn_params(cout)
+    return p
+
+
+def _basic_block(p, x, stride):
+    h = jax.nn.relu(batch_norm(conv2d(x, p["c1"], stride), p["bn1"]))
+    h = batch_norm(conv2d(h, p["c2"]), p["bn2"])
+    if "proj" in p:
+        x = batch_norm(conv2d(x, p["proj"], stride), p["bnp"])
+    return jax.nn.relu(x + h)
+
+
+def _init_bottleneck(key, cin, cmid, stride):
+    k = jax.random.split(key, 4)
+    cout = cmid * 4
+    p = {
+        "c1": _conv_init(k[0], (1, 1, cin, cmid)), "bn1": _bn_params(cmid),
+        "c2": _conv_init(k[1], (3, 3, cmid, cmid)), "bn2": _bn_params(cmid),
+        "c3": _conv_init(k[2], (1, 1, cmid, cout)), "bn3": _bn_params(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(k[3], (1, 1, cin, cout))
+        p["bnp"] = _bn_params(cout)
+    return p
+
+
+def _bottleneck(p, x, stride):
+    h = jax.nn.relu(batch_norm(conv2d(x, p["c1"]), p["bn1"]))
+    h = jax.nn.relu(batch_norm(conv2d(h, p["c2"], stride), p["bn2"]))
+    h = batch_norm(conv2d(h, p["c3"]), p["bn3"])
+    if "proj" in p:
+        x = batch_norm(conv2d(x, p["proj"], stride), p["bnp"])
+    return jax.nn.relu(x + h)
+
+
+_RESNET_SPECS = {
+    18: ("basic", (2, 2, 2, 2)),
+    50: ("bottleneck", (3, 4, 6, 3)),
+}
+
+
+def init_resnet(key, depth=18, n_classes=10, in_ch=3, width=64):
+    kind, blocks = _RESNET_SPECS[depth]
+    keys = jax.random.split(key, sum(blocks) + 2)
+    ki = iter(keys)
+    p = {"stem": _conv_init(next(ki), (7, 7, in_ch, width)),
+         "bn_stem": _bn_params(width), "stages": []}
+    cin = width
+    for si, n in enumerate(blocks):
+        cmid = width * (2 ** si)
+        stage = []
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            if kind == "basic":
+                stage.append(_init_basic_block(next(ki), cin, cmid, stride))
+                cin = cmid
+            else:
+                stage.append(_init_bottleneck(next(ki), cin, cmid, stride))
+                cin = cmid * 4
+        p["stages"].append(stage)
+    p["fc"] = _dense_init(next(ki), (cin, n_classes))
+    return p
+
+
+def resnet(p, x, depth=18):
+    kind, blocks = _RESNET_SPECS[depth]
+    x = jax.nn.relu(batch_norm(conv2d(x, p["stem"], 2), p["bn_stem"]))
+    x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 3, 3, 1), (1, 2, 2, 1),
+                          "SAME")
+    fn = _basic_block if kind == "basic" else _bottleneck
+    for si, stage in enumerate(p["stages"]):
+        for bi, bp in enumerate(stage):
+            x = fn(bp, x, 2 if (bi == 0 and si > 0) else 1)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["fc"]
+
+
+# ---------------------------------------------------------------------------
+# EfficientNet-lite (MBConv stack) — Fed-ISIC2019.
+# ---------------------------------------------------------------------------
+_EFF_STAGES = (  # (expand, cout, n, stride)
+    (1, 16, 1, 1), (6, 24, 2, 2), (6, 40, 2, 2), (6, 80, 3, 2),
+    (6, 112, 3, 1), (6, 192, 4, 2), (6, 320, 1, 1),
+)
+
+
+def _init_mbconv(key, cin, cout, expand, stride):
+    k = jax.random.split(key, 3)
+    cmid = cin * expand
+    p = {"dw": _conv_init(k[1], (3, 3, 1, cmid)), "bn_dw": _bn_params(cmid),
+         "pw": _conv_init(k[2], (1, 1, cmid, cout)), "bn_pw": _bn_params(cout)}
+    if expand != 1:
+        p["exp"] = _conv_init(k[0], (1, 1, cin, cmid))
+        p["bn_exp"] = _bn_params(cmid)
+    return p
+
+
+def _mbconv(p, x, stride):
+    h = x
+    if "exp" in p:
+        h = jax.nn.relu6(batch_norm(conv2d(h, p["exp"]), p["bn_exp"]))
+    cmid = h.shape[-1]
+    h = jax.nn.relu6(batch_norm(conv2d(h, p["dw"], stride, groups=cmid),
+                                p["bn_dw"]))
+    h = batch_norm(conv2d(h, p["pw"]), p["bn_pw"])
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = x + h
+    return h
+
+
+def init_efficientnet(key, n_classes=8, in_ch=3):
+    keys = jax.random.split(key, sum(n for _, _, n, _ in _EFF_STAGES) + 3)
+    ki = iter(keys)
+    p = {"stem": _conv_init(next(ki), (3, 3, in_ch, 32)),
+         "bn_stem": _bn_params(32), "blocks": []}
+    cin = 32
+    for expand, cout, n, stride in _EFF_STAGES:
+        for bi in range(n):
+            s = stride if bi == 0 else 1
+            p["blocks"].append(
+                (_init_mbconv(next(ki), cin, cout, expand, s), s))
+            cin = cout
+    p["head"] = _conv_init(next(ki), (1, 1, cin, 1280))
+    p["bn_head"] = _bn_params(1280)
+    p["fc"] = _dense_init(next(ki), (1280, n_classes))
+    return p
+
+
+def efficientnet(p, x):
+    x = jax.nn.relu6(batch_norm(conv2d(x, p["stem"], 2), p["bn_stem"]))
+    for bp, s in p["blocks"]:
+        x = _mbconv(bp, x, s)
+    x = jax.nn.relu6(batch_norm(conv2d(x, p["head"]), p["bn_head"]))
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["fc"]
+
+
+# ---------------------------------------------------------------------------
+# Registry used by the FL layer.
+# ---------------------------------------------------------------------------
+def build(name: str, key, n_classes: int, in_ch: int, img: int):
+    """Returns (params, apply_fn, input_shape)."""
+    if name == "small_cnn":
+        return (init_small_cnn(key, n_classes, in_ch), small_cnn,
+                (img, img, in_ch))
+    if name == "resnet18":
+        p = init_resnet(key, 18, n_classes, in_ch)
+        return p, lambda pp, x: resnet(pp, x, 18), (img, img, in_ch)
+    if name == "resnet50":
+        p = init_resnet(key, 50, n_classes, in_ch)
+        return p, lambda pp, x: resnet(pp, x, 50), (img, img, in_ch)
+    if name == "efficientnet":
+        return (init_efficientnet(key, n_classes, in_ch), efficientnet,
+                (img, img, in_ch))
+    raise ValueError(name)

@@ -1,0 +1,131 @@
+"""Optimizers (pure JAX, pytree-based): AdamW, SGD(+momentum), schedules,
+global-norm clipping. Optimizer state is kept in fp32 regardless of param
+dtype (bf16 params update through an fp32 math path and cast back).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: object          # first moment  (or momentum buffer for sgd)
+    nu: object          # second moment (None-like zeros for sgd)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable    # (grads, state, params) -> (new_params, new_state)
+
+
+def _f32_like(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr, warmup, total):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant_schedule(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+          clip_norm: Optional[float] = 1.0, schedule=None) -> Optimizer:
+    sched = schedule or constant_schedule(lr)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _f32_like(params),
+                        _f32_like(params))
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = sched(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr_t * delta
+            return new_p.astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptState(step, new_m, new_v)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr=0.01, momentum=0.9, clip_norm: Optional[float] = None,
+        schedule=None) -> Optimizer:
+    sched = schedule or constant_schedule(lr)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _f32_like(params),
+                        jnp.zeros((), jnp.float32))
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            m = momentum * m + g
+            new_p = p.astype(jnp.float32) - lr_t * m
+            return new_p.astype(p.dtype), m
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (treedef.unflatten([o[0] for o in out]),
+                OptState(step, treedef.unflatten([o[1] for o in out]),
+                         state.nu))
+
+    return Optimizer(init, update)
+
+
+def get(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "sgd":
+        return sgd(**kw)
+    raise ValueError(name)

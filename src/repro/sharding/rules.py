@@ -1,0 +1,189 @@
+"""Logical-axis sharding rules (MaxText style).
+
+Parameters and activations are annotated with *logical* axis names; a rule
+table maps each logical name to zero-or-more mesh axes. This decouples model
+code from the concrete mesh so the same model lowers on the single-pod
+``(data, model)`` mesh, the multi-pod ``(pod, data, model)`` mesh, and the
+1-device CPU mesh used by the smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, MeshAxes]
+
+# ---------------------------------------------------------------------------
+# Default rule tables.
+# ---------------------------------------------------------------------------
+# Standard data+model parallel training (pods act as extra DP):
+TRAIN_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "fl_clients": ("pod",),       # FL-in-mesh: client axis lives on pods
+    "fl_batch": ("data",),        # FL-in-mesh: per-client batch
+    # Megatron-style sequence parallelism for the residual stream: the
+    # scan-over-layers carry is (batch, seq, d_model); sharding seq over
+    # `model` cuts the remat-saved carries by 16x (39GB -> 10.6GB/device
+    # for phi3 train_4k — see EXPERIMENTS.md §Dry-run). Inside attention
+    # the `model` axis is re-used by heads, so resolve_spec drops the seq
+    # constraint there automatically (= all-gather at the block boundary,
+    # exactly Megatron SP).
+    "seq": ("model",),
+    "embed": ("data",),           # FSDP shard of the d_model weight dim
+    "embed_act": None,            # activations keep d_model unsharded
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_cap": None,
+    "ssm_inner": ("model",),      # mamba2 inner channels
+    "ssm_heads": ("model",),
+    "ssm_state": None,
+    "lru_width": ("model",),
+    "conv_width": None,
+    "layers": None,               # stacked-scan leading dim
+    "cache_len": None,
+    "cond": None,                 # conditioning (image/audio) tokens
+    "norm": None,
+}
+
+# Decode: KV cache dominates memory → shard cache length over `model`
+# (flash-decode style); batch over `data`.
+DECODE_RULES: Rules = dict(
+    TRAIN_RULES,
+    batch=("data",),
+    cache_len=("model",),
+    kv_heads=None,        # heads often < model axis; length-sharding instead
+    heads=("model",),
+)
+
+
+def make_rules(kind: str, overrides: Optional[Rules] = None) -> Rules:
+    base = dict(TRAIN_RULES if kind in ("train", "prefill") else DECODE_RULES)
+    if overrides:
+        base.update(overrides)
+    return base
+
+
+# ---------------------------------------------------------------------------
+# Resolution helpers.
+# ---------------------------------------------------------------------------
+def _axis_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# Mesh axes are claimed by logical axes in PRIORITY order, not positional
+# order: compute-parallel dims (heads/mlp/experts/...) outrank sequence
+# parallelism, which outranks everything else. This is what lets an arch
+# whose head count does NOT divide the model axis (musicgen/granite: 24
+# heads on a 16-way axis) fall back to sequence sharding instead of
+# silently replicating its attention (observed: useful_ratio 0.016 ->
+# fixed: seq claims the freed axis; see EXPERIMENTS.md §Perf).
+_CLAIM_PRIORITY = {
+    "batch": 0, "fl_clients": 0, "fl_batch": 0,
+    "heads": 1, "kv_heads": 1, "mlp": 1, "experts": 1, "ssm_inner": 1,
+    "ssm_heads": 1, "lru_width": 1, "vocab": 1, "embed": 1,
+    "cache_len": 1,
+    "seq": 3,
+}
+
+
+def resolve_spec(logical_axes: Sequence[Optional[str]], rules: Rules,
+                 mesh: Mesh, shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names to a PartitionSpec valid on `mesh`.
+
+    Mesh axes are claimed in priority order (see _CLAIM_PRIORITY). When
+    `shape` is given, any mapping whose dim is not divisible by the
+    mesh-axis extent is dropped (jit in_shardings reject uneven
+    partitions — e.g. 8 kv heads on a 16-way model axis, or granite's 40
+    experts), freeing the axis for lower-priority claimants.
+    """
+    order = sorted(
+        (i for i, n in enumerate(logical_axes) if n is not None),
+        key=lambda i: (_CLAIM_PRIORITY.get(logical_axes[i], 2), i))
+    used = set()
+    out: list = [None] * len(logical_axes)
+    for i in order:
+        name = logical_axes[i]
+        mesh_axes = rules.get(name, None)
+        if mesh_axes is None:
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        # keep only axes present in this mesh and not already used
+        mesh_axes = tuple(a for a in mesh_axes
+                          if a in mesh.axis_names and a not in used)
+        if shape is not None and mesh_axes:
+            # drop axes (right-to-left) until the dim divides evenly
+            while mesh_axes and shape[i] % _axis_size(mesh, mesh_axes) != 0:
+                mesh_axes = mesh_axes[:-1]
+        used.update(mesh_axes)
+        if not mesh_axes:
+            out[i] = None
+        elif len(mesh_axes) == 1:
+            out[i] = mesh_axes[0]
+        else:
+            out[i] = mesh_axes
+    # trailing Nones can be dropped (canonical form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def resolve_sharding(logical_axes, rules: Rules, mesh: Mesh,
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(logical_axes, rules, mesh,
+                                            shape))
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def tree_shardings(logical_tree, rules: Rules, mesh: Mesh,
+                   abstract_tree=None):
+    """Map a pytree of logical-axis tuples to NamedShardings; when the
+    matching abstract tree is given, shardings are shape-validated."""
+    if abstract_tree is None:
+        return jax.tree.map(
+            lambda axes: resolve_sharding(axes, rules, mesh),
+            logical_tree, is_leaf=_is_axes)
+    return jax.tree.map(
+        lambda axes, aval: resolve_sharding(axes, rules, mesh, aval.shape),
+        logical_tree, abstract_tree, is_leaf=_is_axes)
+
+
+def constraint(x, logical_axes, rules: Optional[Rules], mesh: Optional[Mesh]):
+    """`with_sharding_constraint` via logical names; no-op without a mesh."""
+    if rules is None or mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, resolve_sharding(logical_axes, rules, mesh, x.shape))
+
+
+class ShardingCtx:
+    """Threaded through model code: mesh + rules, or inert for CPU tests."""
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 rules: Optional[Rules] = None):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __call__(self, x, *logical_axes):
+        return constraint(x, logical_axes, self.rules, self.mesh)
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None and self.rules is not None
+
+
+INERT = ShardingCtx()

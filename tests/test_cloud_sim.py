@@ -1,0 +1,180 @@
+"""Tests for the cloud simulator + pricing + the policy-level invariants
+the paper's Table I rests on (spot = price-ratio savings; FedCostAware
+strictly cheaper than plain spot under stragglers)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.common.config import CloudConfig, ClientProfile, FLRunConfig
+from repro.cloud.pricing import PriceBook
+from repro.cloud.simulator import CloudSimulator
+from repro.fl.runner import FLCloudRunner
+
+
+CLOUD = CloudConfig(spot_rate_sigma=0.0)   # deterministic prices
+
+
+class TestPricing:
+    def test_price_bounds(self):
+        pb = PriceBook(CloudConfig(), seed=3)
+        for z in pb.zones:
+            for t in np.linspace(0, 48 * 3600, 50):
+                p = pb.spot_price(z.name, t)
+                assert 0.25 * 1.008 <= p <= 1.008
+
+    def test_integral_matches_flat_rate(self):
+        pb = PriceBook(CLOUD, seed=0)
+        z = pb.zones[0].name
+        c = pb.cost(z, 0.0, 3600.0, on_demand=False)
+        assert c == pytest.approx(pb.spot_price(z, 0.0), rel=1e-6)
+
+    def test_on_demand_flat(self):
+        pb = PriceBook(CLOUD, seed=0)
+        assert pb.cost("any", 0, 7200, on_demand=True) == pytest.approx(
+            2 * 1.008)
+
+    def test_cheapest_zone(self):
+        pb = PriceBook(CloudConfig(), seed=1)
+        z, p = pb.cheapest_zone(0.0)
+        assert p == min(pb.spot_price(zz.name, 0.0) for zz in pb.zones)
+
+
+class TestSimulator:
+    def test_billing_starts_at_ready(self):
+        sim = CloudSimulator(CLOUD, seed=0)
+        inst = sim.request_instance("c")
+        sim.run_until_idle()
+        assert inst.state == "running"
+        t_ready = inst.t_ready
+        sim.now = t_ready + 3600.0
+        cost = sim.accrued_cost(inst)
+        assert cost == pytest.approx(
+            sim.prices.spot_price(inst.zone, t_ready), rel=0.02)
+
+    def test_min_billing(self):
+        sim = CloudSimulator(CLOUD, seed=0)
+        inst = sim.request_instance("c")
+        sim.run_until_idle()
+        sim.now = inst.t_ready + 5.0      # used 5s, billed >= 60s
+        sim.terminate(inst)
+        assert inst.cost >= 59.0 / 3600.0 * 0.25 * 1.008
+
+    def test_terminate_while_spinning_never_runs(self):
+        sim = CloudSimulator(CLOUD, seed=0)
+        ran = []
+        inst = sim.request_instance("c", on_ready=lambda i: ran.append(i))
+        sim.terminate(inst)
+        sim.run_until_idle()
+        assert ran == [] and inst.cost == 0.0
+
+    def test_preemption_fires(self):
+        cfg = CloudConfig(preemption_rate_per_hr=50.0, spot_rate_sigma=0.0)
+        sim = CloudSimulator(cfg, seed=1)
+        preempted = []
+        sim.request_instance("c", on_preempt=lambda i: preempted.append(i))
+        sim.run_until_idle(t_max=10 * 3600)
+        assert len(preempted) == 1
+
+
+def run_policy(policy, clients=None, n_epochs=8, cloud=None, seed=0):
+    clients = clients or (
+        ClientProfile("slow", mean_epoch_s=900, jitter=0.0, n_samples=3),
+        ClientProfile("mid", mean_epoch_s=450, jitter=0.0, n_samples=2),
+        ClientProfile("fast", mean_epoch_s=150, jitter=0.0, n_samples=1),
+    )
+    cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=n_epochs,
+                      policy=policy, seed=seed)
+    return FLCloudRunner(cfg, cloud_cfg=cloud or CLOUD).run()
+
+
+class TestPolicies:
+    def test_spot_saves_price_ratio_vs_on_demand(self):
+        od = run_policy("on_demand")
+        sp = run_policy("spot")
+        ratio = sp.total_cost / od.total_cost
+        # paper: 60.8% saving = spot/on-demand price ratio
+        assert ratio == pytest.approx(0.3951 / 1.008, rel=0.03)
+
+    def test_fedcostaware_beats_spot_with_stragglers(self):
+        sp = run_policy("spot")
+        fca = run_policy("fedcostaware")
+        assert fca.total_cost < sp.total_cost * 0.9
+        assert fca.rounds_completed == 8
+
+    def test_all_policies_complete_all_rounds(self):
+        for p in ("on_demand", "spot", "fedcostaware"):
+            assert run_policy(p).rounds_completed == 8
+
+    def test_homogeneous_clients_no_lifecycle_churn(self):
+        clients = tuple(ClientProfile(f"c{i}", 600.0, jitter=0.0)
+                        for i in range(3))
+        res = run_policy("fedcostaware", clients=clients)
+        # identical clients -> idle time ~ 0 -> no savings segments
+        assert not [s for s in res.timeline if s.state == "savings"]
+
+    def test_budget_exclusion_in_runner(self):
+        clients = (
+            ClientProfile("rich", 600, n_samples=2, jitter=0.0),
+            ClientProfile("poor", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        res = run_policy("fedcostaware", clients=clients, n_epochs=10)
+        assert "poor" in res.excluded_clients
+        assert res.rounds_completed == 10
+        assert res.per_round_participants[-1] == ["rich"]
+
+    def test_preemption_recovery_completes_run(self):
+        cloud = CloudConfig(preemption_rate_per_hr=0.4, spot_rate_sigma=0.0)
+        res = run_policy("fedcostaware", cloud=cloud, seed=3)
+        assert res.rounds_completed == 8
+        kinds = {e["kind"] for e in []}
+        # run again to inspect events
+        cfg = FLRunConfig(dataset="t", clients=(
+            ClientProfile("slow", mean_epoch_s=900, jitter=0.0),
+            ClientProfile("fast", mean_epoch_s=150, jitter=0.0)),
+            n_epochs=8, policy="fedcostaware", seed=3)
+        r = FLCloudRunner(cfg, cloud_cfg=cloud)
+        out = r.run()
+        evk = [e["kind"] for e in r.sim.event_log]
+        assert out.rounds_completed == 8
+        if "preempt" in evk:
+            # recovery happened and the run still finished every round
+            assert evk.count("request") > len(cfg.clients)
+
+    def test_timeline_segments_cover_run(self):
+        res = run_policy("fedcostaware")
+        for seg in res.timeline:
+            assert seg.t1 >= seg.t0 >= 0.0
+        by_client = {}
+        for seg in res.timeline:
+            by_client.setdefault(seg.client, []).append(seg)
+        for segs in by_client.values():
+            ts = sorted((s.t0, s.t1) for s in segs)
+            for (a0, a1), (b0, b1) in zip(ts, ts[1:]):
+                assert b0 >= a0 - 1e-6   # ordered, non-overlapping starts
+
+
+class TestElasticScaling:
+    def test_client_joins_mid_run(self):
+        clients = (
+            ClientProfile("a", 600, jitter=0.0),
+            ClientProfile("b", 300, jitter=0.0),
+            ClientProfile("late", 200, jitter=0.0, join_round=3),
+        )
+        res = run_policy("fedcostaware", clients=clients, n_epochs=6)
+        sizes = [len(p) for p in res.per_round_participants]
+        assert sizes == [2, 2, 2, 3, 3, 3]
+        assert res.rounds_completed == 6
+        assert res.per_client_cost["late"] > 0
+
+    def test_join_and_budget_leave_compose(self):
+        clients = (
+            ClientProfile("a", 600, jitter=0.0),
+            ClientProfile("late_poor", 200, jitter=0.0, join_round=2,
+                          budget=0.06),
+        )
+        res = run_policy("fedcostaware", clients=clients, n_epochs=8)
+        sizes = [len(p) for p in res.per_round_participants]
+        assert sizes[0] == 1 and max(sizes) == 2 and sizes[-1] == 1
+        assert "late_poor" in res.excluded_clients

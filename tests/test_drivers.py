@@ -1,0 +1,29 @@
+"""Integration tests for the train/serve drivers (public entry points)."""
+import os
+import sys
+
+import pytest
+
+
+def test_train_driver_with_resume(tmp_path, capsys):
+    from repro.launch import train as T
+    ckpt = str(tmp_path / "ck")
+    T.main(["--arch", "musicgen-medium", "--steps", "6", "--batch", "2",
+            "--seq", "16", "--ckpt-dir", ckpt, "--ckpt-every", "3",
+            "--log-every", "3"])
+    out1 = capsys.readouterr().out
+    assert "done." in out1
+    # second invocation resumes from the saved step
+    T.main(["--arch", "musicgen-medium", "--steps", "8", "--batch", "2",
+            "--seq", "16", "--ckpt-dir", ckpt, "--ckpt-every", "3",
+            "--log-every", "2"])
+    out2 = capsys.readouterr().out
+    assert "resumed from checkpoint step" in out2
+
+
+def test_serve_driver(capsys):
+    from repro.launch import serve as S
+    S.main(["--arch", "recurrentgemma-2b", "--batch", "2",
+            "--prompt-len", "6", "--gen", "6"])
+    out = capsys.readouterr().out
+    assert "ms/token" in out and "seq0:" in out

@@ -1,0 +1,203 @@
+"""FL substrate tests: aggregation math, FedProx, end-to-end learning,
+checkpoint/resume fault tolerance, dual-Dirichlet partitioner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import (CloudConfig, ClientProfile, FLRunConfig,
+                                 SchedulerConfig)
+from repro.checkpoint.ckpt import Checkpointer, AsyncCheckpointer, \
+    ShardedCheckpointer, serialize_pytree, deserialize_into
+from repro.checkpoint.store import MemoryStore, FileStore
+from repro.data.partition import dual_dirichlet_partition, natural_partition
+from repro.data.synthetic import make_dataset, minibatches, token_stream
+from repro.fl.algorithms import ServerState, weighted_average, \
+    fedprox_penalty
+from repro.fl.client import FLClient
+from repro.fl.runner import FLCloudRunner
+from repro.fl.server import FederatedServer, JaxTrainerHooks
+from repro.models import cnn
+from repro.optim.optimizers import adamw, sgd
+
+
+class TestAggregation:
+    def test_weighted_average_exact(self):
+        p1 = {"w": jnp.ones((2, 2))}
+        p2 = {"w": jnp.zeros((2, 2))}
+        avg = weighted_average([p1, p2], [3.0, 1.0])
+        np.testing.assert_allclose(np.asarray(avg["w"]), 0.75)
+
+    def test_fedavgm_momentum_accumulates(self):
+        init = {"w": jnp.zeros(3)}
+        srv = ServerState(init, "fedavgm", server_momentum=0.5)
+        upd = {"w": jnp.ones(3)}
+        srv.aggregate([upd], [1.0])
+        w1 = np.asarray(srv.params["w"]).copy()
+        srv.aggregate([{"w": jnp.asarray(w1) + 1.0}], [1.0])
+        w2 = np.asarray(srv.params["w"])
+        assert np.all(w2 > w1)          # momentum keeps moving
+
+    def test_fedprox_penalty_zero_at_global(self):
+        p = {"w": jnp.ones(4)}
+        assert float(fedprox_penalty(p, p, mu=0.1)) == 0.0
+        q = {"w": jnp.ones(4) * 2}
+        assert float(fedprox_penalty(q, p, 0.1)) == pytest.approx(
+            0.5 * 0.1 * 4.0)
+
+
+class TestPartition:
+    def test_dual_dirichlet_disjoint_and_sized(self):
+        labels = np.random.RandomState(0).randint(0, 10, 5000)
+        parts = dual_dirichlet_partition(labels, 5, seed=1)
+        all_idx = np.concatenate(parts)
+        assert len(np.unique(all_idx)) == len(all_idx)   # disjoint
+        assert len(all_idx) <= len(labels)
+        assert all(len(p) >= 8 for p in parts)
+
+    def test_volume_heterogeneity(self):
+        labels = np.random.RandomState(0).randint(0, 10, 20000)
+        parts = dual_dirichlet_partition(labels, 6, alpha_volume=0.5,
+                                         seed=2)
+        sizes = sorted(len(p) for p in parts)
+        assert sizes[-1] > 2 * sizes[0]   # skewed volumes
+
+    def test_class_heterogeneity(self):
+        labels = np.random.RandomState(0).randint(0, 10, 20000)
+        parts = dual_dirichlet_partition(labels, 4, alpha_class=0.2,
+                                         seed=3)
+        # each client's class distribution is far from uniform
+        for p in parts:
+            hist = np.bincount(labels[p], minlength=10) / len(p)
+            assert hist.max() > 0.2
+
+    def test_natural_partition_fractions(self):
+        labels = np.zeros(1000)
+        parts = natural_partition(labels, [0.5, 0.3, 0.2], seed=0)
+        assert [len(p) for p in parts] == [500, 300, 200]
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": {"c": jnp.ones(4, jnp.bfloat16), "n": 7}}
+
+    def test_roundtrip(self):
+        t = self._tree()
+        data = serialize_pytree(t)
+        out = deserialize_into(t, data)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(t["a"]))
+        assert out["b"]["c"].dtype == jnp.bfloat16
+
+    def test_checkpointer_restore(self):
+        ck = Checkpointer(MemoryStore())
+        t = self._tree()
+        ck.save("run/step=5", t)
+        out = ck.restore("run/step=5", template=t)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(t["a"]))
+        assert ck.restore("missing", template=t) is None
+
+    def test_latest_step(self):
+        ck = Checkpointer(MemoryStore())
+        for s in (1, 5, 3):
+            ck.save(f"run/step={s}", {"x": jnp.zeros(1)})
+        assert ck.latest_step("run") == 5
+
+    def test_async_checkpointer(self):
+        ck = AsyncCheckpointer(MemoryStore())
+        t = self._tree()
+        for i in range(4):
+            ck.save(f"r/step={i}", t)
+        ck.wait()
+        assert ck.latest_step("r") == 3
+
+    def test_sharded_checkpointer(self):
+        ck = ShardedCheckpointer(MemoryStore(), process_index=0)
+        t = self._tree()
+        ck.save("s1", t)
+        out = ck.restore("s1", t)
+        np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                      np.asarray(t["b"]["c"]))
+
+    def test_file_store_atomic(self, tmp_path):
+        fs = FileStore(str(tmp_path))
+        fs.put("k/1", b"hello")
+        assert fs.get("k/1") == b"hello"
+        fs.put("k/1", b"world")
+        assert fs.get("k/1") == b"world"
+        assert fs.get("nope") is None
+
+
+def _make_fl_setup(n_clients=3, n=900, checkpoint=False):
+    ds = make_dataset("mnist", n, seed=0)
+    parts = dual_dirichlet_partition(ds.y, n_clients, alpha_class=2.0,
+                                     seed=0)
+    params, apply_fn, _ = cnn.build("small_cnn", jax.random.PRNGKey(0),
+                                    ds.n_classes, 1, 28)
+    store = MemoryStore()
+    clients = []
+    for i, idx in enumerate(parts):
+        def data_fn(r, idx=idx, i=i):
+            return minibatches(ds, idx, 32, seed=r * 10 + i)
+        clients.append(FLClient(
+            f"c{i}", apply_fn, adamw(lr=1e-3), data_fn, len(idx),
+            checkpointer=Checkpointer(store) if checkpoint else None,
+            checkpoint_every=2))
+    return ds, params, apply_fn, clients
+
+
+class TestEndToEnd:
+    def test_fl_learns(self):
+        ds, params, apply_fn, clients = _make_fl_setup()
+        server = FederatedServer(params)
+        hist = server.fit(clients, 4)
+        assert hist[-1]["mean_client_loss"] < hist[0]["mean_client_loss"]
+        logits = apply_fn(server.params, jnp.asarray(ds.x[:256]))
+        acc = float(jnp.mean(jnp.argmax(logits, -1)
+                             == jnp.asarray(ds.y[:256])))
+        assert acc > 0.8
+
+    def test_resume_from_checkpoint_mid_epoch(self):
+        """Fault tolerance (§III-D): resume reproduces training progress."""
+        ds, params, apply_fn, clients = _make_fl_setup(checkpoint=True)
+        c = clients[0]
+        # full epoch
+        p_full, m = c.train_epoch(params, round_idx=0)
+        assert m.n_batches >= 4
+        # now simulate preemption: epoch ran, checkpoints exist; resume
+        p_resumed, m2 = c.train_epoch(params, round_idx=0,
+                                      resume_from_batch=1)
+        assert m2.n_batches < m.n_batches       # skipped preserved batches
+        # resumed params close to full-epoch params (same data order)
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(p_full),
+                                jax.tree.leaves(p_resumed)))
+        assert d < 1e-4
+
+    def test_cloud_runner_with_real_training(self):
+        ds, params, apply_fn, clients = _make_fl_setup()
+        server = FederatedServer(params)
+        hooks = JaxTrainerHooks(server, {c.name: c for c in clients})
+        profiles = tuple(ClientProfile(c.name, 300.0 * (i + 1),
+                                       n_samples=c.n_samples, jitter=0.0)
+                         for i, c in enumerate(clients))
+        cfg = FLRunConfig(dataset="mnist", clients=profiles, n_epochs=3,
+                          policy="fedcostaware")
+        res = FLCloudRunner(cfg, hooks=hooks).run()
+        assert res.rounds_completed == 3
+        assert len(server.history) == 3
+        logits = apply_fn(server.params, jnp.asarray(ds.x[:256]))
+        acc = float(jnp.mean(jnp.argmax(logits, -1)
+                             == jnp.asarray(ds.y[:256])))
+        assert acc > 0.6
+
+
+class TestTokenStream:
+    def test_markov_stream_learnable_shapes(self):
+        it = token_stream(vocab=64, batch=4, seq=16, seed=0)
+        b = next(it)
+        assert b["tokens"].shape == (4, 16)
+        assert b["labels"].shape == (4, 16)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 64

@@ -1,0 +1,242 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps against
+the pure-jnp oracles, per the kernel contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import reference_attention
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_reference
+from repro.kernels.grad_quant.ops import quantize, dequantize
+from repro.kernels.grad_quant import kernel as QK, ref as QR
+
+
+def _fold(x):
+    B, S, N, H = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * N, S, H)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,H,dtype", [
+        (128, 32, jnp.float32),
+        (256, 64, jnp.float32),
+        (128, 64, jnp.bfloat16),
+        (512, 128, jnp.float32),
+    ])
+    def test_shape_dtype_sweep(self, S, H, dtype):
+        rng = np.random.RandomState(hash((S, H)) % 2**31)
+        B, N = 2, 2
+        q = jnp.asarray(rng.randn(B, S, N, H), dtype)
+        k = jnp.asarray(rng.randn(B, S, N, H), dtype)
+        v = jnp.asarray(rng.randn(B, S, N, H), dtype)
+        out = flash_attention(q, k, v, block_q=64, block_k=64,
+                              interpret=True)
+        ref = reference_attention(_fold(q), _fold(k), _fold(v))
+        ref = ref.reshape(B, N, S, H).transpose(0, 2, 1, 3)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_sliding_window(self, window):
+        rng = np.random.RandomState(7)
+        B, S, N, H = 1, 256, 2, 32
+        q, k, v = (jnp.asarray(rng.randn(B, S, N, H), jnp.float32)
+                   for _ in range(3))
+        out = flash_attention(q, k, v, window=window, block_q=64,
+                              block_k=64, interpret=True)
+        ref = reference_attention(_fold(q), _fold(k), _fold(v),
+                                  window=window)
+        ref = ref.reshape(B, N, S, H).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_softcap(self):
+        rng = np.random.RandomState(8)
+        B, S, N, H = 1, 128, 2, 32
+        q, k, v = (jnp.asarray(rng.randn(B, S, N, H) * 3, jnp.float32)
+                   for _ in range(3))
+        out = flash_attention(q, k, v, softcap=10.0, block_q=64,
+                              block_k=64, interpret=True)
+        ref = reference_attention(_fold(q), _fold(k), _fold(v),
+                                  softcap=10.0)
+        ref = ref.reshape(B, N, S, H).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_block_size_invariance(self):
+        rng = np.random.RandomState(9)
+        B, S, N, H = 1, 256, 1, 32
+        q, k, v = (jnp.asarray(rng.randn(B, S, N, H), jnp.float32)
+                   for _ in range(3))
+        o1 = flash_attention(q, k, v, block_q=32, block_k=64,
+                             interpret=True)
+        o2 = flash_attention(q, k, v, block_q=128, block_k=32,
+                             interpret=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("s,p,n,chunk", [
+        (64, 16, 16, 16), (128, 32, 64, 32), (256, 64, 128, 64),
+    ])
+    def test_vs_reference(self, s, p, n, chunk):
+        rng = np.random.RandomState(s + p)
+        b, h = 2, 3
+        xbar = jnp.asarray(rng.randn(b, s, h, p) * 0.5, jnp.float32)
+        log_a = jnp.asarray(-np.abs(rng.randn(b, s, h)) * 0.1, jnp.float32)
+        Bm = jnp.asarray(rng.randn(b, s, h, n) * 0.3, jnp.float32)
+        Cm = jnp.asarray(rng.randn(b, s, h, n) * 0.3, jnp.float32)
+        yk, _ = ssd(xbar, log_a, Bm, Cm, chunk=chunk, interpret=True)
+        yr, _ = ssd_reference(xbar, log_a, Bm, Cm, chunk=chunk)
+        scale = float(jnp.max(jnp.abs(yr))) + 1e-9
+        assert float(jnp.max(jnp.abs(yk - yr))) / scale < 1e-5
+
+    def test_vs_sequential_recurrence(self):
+        """Independent O(S) oracle: h_t = a_t h_{t-1} + B_t x_t."""
+        rng = np.random.RandomState(11)
+        b, s, h, p, n = 1, 64, 2, 8, 8
+        xbar = jnp.asarray(rng.randn(b, s, h, p) * 0.5, jnp.float32)
+        log_a = jnp.asarray(-np.abs(rng.randn(b, s, h)) * 0.2, jnp.float32)
+        Bm = jnp.asarray(rng.randn(b, s, h, n) * 0.4, jnp.float32)
+        Cm = jnp.asarray(rng.randn(b, s, h, n) * 0.4, jnp.float32)
+
+        def step(st, inp):
+            x_t, la_t, b_t, c_t = inp
+            st = (jnp.exp(la_t)[..., None, None] * st
+                  + jnp.einsum("bhp,bhn->bhpn", x_t, b_t))
+            return st, jnp.einsum("bhpn,bhn->bhp", st, c_t)
+
+        st0 = jnp.zeros((b, h, p, n))
+        _, ys = jax.lax.scan(step, st0, (
+            xbar.transpose(1, 0, 2, 3), log_a.transpose(1, 0, 2),
+            Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3)))
+        y_seq = ys.transpose(1, 0, 2, 3)
+        yk, _ = ssd(xbar, log_a, Bm, Cm, chunk=16, interpret=True)
+        scale = float(jnp.max(jnp.abs(y_seq))) + 1e-9
+        assert float(jnp.max(jnp.abs(yk - y_seq))) / scale < 1e-4
+
+    def test_chunk_invariance(self):
+        rng = np.random.RandomState(12)
+        b, s, h, p, n = 1, 128, 1, 8, 8
+        args = (jnp.asarray(rng.randn(b, s, h, p) * 0.5, jnp.float32),
+                jnp.asarray(-np.abs(rng.randn(b, s, h)) * 0.1, jnp.float32),
+                jnp.asarray(rng.randn(b, s, h, n) * 0.3, jnp.float32),
+                jnp.asarray(rng.randn(b, s, h, n) * 0.3, jnp.float32))
+        y1, _ = ssd(*args, chunk=16, interpret=True)
+        y2, _ = ssd(*args, chunk=64, interpret=True)
+        scale = float(jnp.max(jnp.abs(y1))) + 1e-9
+        assert float(jnp.max(jnp.abs(y1 - y2))) / scale < 1e-5
+
+
+class TestGradQuant:
+    @pytest.mark.parametrize("shape", [(100,), (3, 1000), (17, 65, 5)])
+    def test_pallas_matches_ref(self, shape):
+        rng = np.random.RandomState(sum(shape))
+        x = jnp.asarray(rng.randn(*shape) * 0.01, jnp.float32)
+        qp, sp = quantize(x, use_pallas=True)
+        qr, sr = quantize(x, use_pallas=False)
+        assert jnp.array_equal(qp, qr)
+        np.testing.assert_allclose(np.asarray(sp), np.asarray(sr),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_roundtrip_error_bound(self, dtype):
+        rng = np.random.RandomState(5)
+        x = jnp.asarray(rng.randn(4, 3333), dtype)
+        q, s = quantize(x, use_pallas=True)
+        xd = dequantize(q, s, (4, 3333), dtype=jnp.float32,
+                        use_pallas=True)
+        amax = float(jnp.max(jnp.abs(x.astype(jnp.float32))))
+        # symmetric int8: error <= scale/2 <= amax/254 per block
+        err = float(jnp.max(jnp.abs(xd - x.astype(jnp.float32))))
+        assert err <= amax / 127.0 + 1e-6
+
+    def test_zero_tensor(self):
+        x = jnp.zeros((2, 100), jnp.float32)
+        q, s = quantize(x, use_pallas=True)
+        xd = dequantize(q, s, (2, 100), use_pallas=True)
+        assert float(jnp.max(jnp.abs(xd))) == 0.0
+
+
+class TestFlashAttentionGrad:
+    def test_grad_matches_reference(self):
+        """use_pallas=True must be trainable: VJP through the kernel
+        matches grads of the pure reference."""
+        rng = np.random.RandomState(21)
+        B, S, N, H = 1, 128, 2, 32
+        q, k, v = (jnp.asarray(rng.randn(B, S, N, H), jnp.float32)
+                   for _ in range(3))
+
+        def loss_kernel(q, k, v):
+            return jnp.sum(flash_attention(q, k, v, block_q=64,
+                                           block_k=64, interpret=True) ** 2)
+
+        def loss_ref(q, k, v):
+            f = lambda x: x.transpose(0, 2, 1, 3).reshape(B * N, S, H)
+            o = reference_attention(f(q), f(k), f(v))
+            return jnp.sum(o ** 2)
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=3e-4, rtol=3e-4)
+
+    def test_model_trains_with_pallas_attention(self):
+        """End-to-end: a smoke transformer takes a grad step with
+        cfg.use_pallas=True (interpret mode on CPU)."""
+        import dataclasses
+        from repro import configs
+        from repro.models import lm
+        cfg = configs.get_config("phi3-mini-3.8b", smoke=True)
+        cfg = dataclasses.replace(cfg, use_pallas=True, attn_chunk=8)
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        batch = {"tokens": jnp.asarray(
+                     rng.randint(0, cfg.vocab_size, (2, 16)), jnp.int32),
+                 "labels": jnp.asarray(
+                     rng.randint(0, cfg.vocab_size, (2, 16)), jnp.int32)}
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch))(params)
+        assert bool(jnp.isfinite(loss))
+        gn = sum(float(jnp.sum(jnp.abs(g)))
+                 for g in jax.tree.leaves(grads))
+        assert gn > 0
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("S,W,chunk,bw", [
+        (64, 16, 16, 16), (128, 64, 32, 32), (256, 32, 128, 32),
+    ])
+    def test_vs_associative_scan(self, S, W, chunk, bw):
+        from repro.kernels.rglru.ops import rglru_scan
+        from repro.kernels.rglru.ref import rglru_scan_ref
+        rng = np.random.RandomState(S + W)
+        log_a = jnp.asarray(-np.abs(rng.randn(2, S, W)) * 0.2, jnp.float32)
+        b = jnp.asarray(rng.randn(2, S, W) * 0.5, jnp.float32)
+        hk = rglru_scan(log_a, b, chunk=chunk, block_w=bw, interpret=True)
+        hr = rglru_scan_ref(log_a, b)
+        scale = float(jnp.max(jnp.abs(hr))) + 1e-9
+        assert float(jnp.max(jnp.abs(hk - hr))) / scale < 1e-5
+
+    def test_recurrentgemma_forward_with_pallas(self):
+        """Full hybrid model forward with the RG-LRU kernel engaged."""
+        import dataclasses
+        from repro import configs
+        from repro.models import lm
+        cfg = configs.get_config("recurrentgemma-2b", smoke=True)
+        cfg = dataclasses.replace(cfg, use_pallas=True, attn_chunk=8)
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.RandomState(1)
+        toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 16)),
+                           jnp.int32)
+        ref_cfg = dataclasses.replace(cfg, use_pallas=False)
+        lo_k, _ = lm.forward(params, cfg, toks)
+        lo_r, _ = lm.forward(params, ref_cfg, toks)
+        err = float(jnp.max(jnp.abs(lo_k - lo_r)))
+        assert err < 2e-3, err

@@ -1,0 +1,132 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import CloudConfig, ClientProfile, FLRunConfig, \
+    SchedulerConfig
+from repro.core.estimator import EMA
+from repro.fl.algorithms import weighted_average
+from repro.fl.runner import FLCloudRunner
+from repro.kernels.grad_quant.ref import quantize_blocks_ref, \
+    dequantize_blocks_ref
+from repro.launch.hlo_analysis import _parse_op_line, _type_bytes
+
+
+# ---------------------------------------------------------------------------
+# EMA invariants.
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(1.0, 1e5), min_size=1, max_size=40),
+       st.floats(0.01, 0.99))
+@settings(max_examples=60, deadline=None)
+def test_ema_stays_within_observed_range(obs, alpha):
+    e = EMA(alpha)
+    for o in obs:
+        e.update(o)
+    assert min(obs) - 1e-6 <= e.value <= max(obs) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Scheduler cost dominance: under zero-jitter profiles, FedCostAware never
+# costs more than plain spot (+ small tolerance for cold-start overhead),
+# and spot always beats on-demand by the price ratio.
+# ---------------------------------------------------------------------------
+@given(
+    st.lists(st.floats(120.0, 2000.0), min_size=2, max_size=5),
+    st.integers(4, 8),
+)
+@settings(max_examples=12, deadline=None)
+def test_policy_cost_ordering(epoch_times, n_epochs):
+    clients = tuple(
+        ClientProfile(f"c{i}", t, jitter=0.0, cold_multiplier=1.1)
+        for i, t in enumerate(epoch_times))
+    cloud = CloudConfig(spot_rate_sigma=0.0)
+    costs = {}
+    for p in ("on_demand", "spot", "fedcostaware"):
+        cfg = FLRunConfig(dataset="x", clients=clients, n_epochs=n_epochs,
+                          policy=p, seed=1)
+        costs[p] = FLCloudRunner(cfg, cloud_cfg=cloud).run().total_cost
+    assert costs["spot"] < costs["on_demand"]
+    # FCA may add cold-start overhead on very homogeneous pools; it must
+    # never exceed plain spot by more than that small overhead.
+    assert costs["fedcostaware"] <= costs["spot"] * 1.10
+
+
+# ---------------------------------------------------------------------------
+# FedAvg invariants.
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 5), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_weighted_average_convexity(n, seed):
+    rng = np.random.RandomState(seed)
+    trees = [{"w": jnp.asarray(rng.randn(4), jnp.float32)}
+             for _ in range(n)]
+    weights = rng.rand(n) + 0.1
+    avg = weighted_average(trees, list(weights))
+    stacked = np.stack([np.asarray(t["w"]) for t in trees])
+    lo, hi = stacked.min(0), stacked.max(0)
+    a = np.asarray(avg["w"])
+    assert np.all(a >= lo - 1e-5) and np.all(a <= hi + 1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_weighted_average_identity(seed):
+    rng = np.random.RandomState(seed)
+    t = {"w": jnp.asarray(rng.randn(8), jnp.float32)}
+    avg = weighted_average([t, t, t], [1.0, 2.0, 5.0])
+    np.testing.assert_allclose(np.asarray(avg["w"]), np.asarray(t["w"]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization error bound: |x - deq(q(x))| <= amax/127 per block.
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2**31 - 1), st.floats(1e-6, 1e3))
+@settings(max_examples=40, deadline=None)
+def test_quant_roundtrip_bound(seed, scale):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, 256) * scale, jnp.float32)
+    q, s = quantize_blocks_ref(x)
+    xd = dequantize_blocks_ref(q, s)
+    amax = np.abs(np.asarray(x)).max(axis=1, keepdims=True)
+    err = np.abs(np.asarray(xd) - np.asarray(x))
+    assert np.all(err <= amax / 127.0 + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# HLO parser robustness: arbitrary identifiers / shapes round-trip.
+# ---------------------------------------------------------------------------
+@given(st.sampled_from(["f32", "bf16", "s32", "s8", "pred"]),
+       st.lists(st.integers(1, 512), min_size=0, max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_type_bytes(dtype, dims):
+    sizes = {"f32": 4, "bf16": 2, "s32": 4, "s8": 1, "pred": 1}
+    t = f"{dtype}[{','.join(map(str, dims))}]"
+    n = 1
+    for d in dims:
+        n *= d
+    assert _type_bytes(t) == n * sizes[dtype]
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096))
+@settings(max_examples=30, deadline=None)
+def test_parse_op_line_dot(m, n):
+    line = (f"  %dot.5 = f32[{m},{n}]{{1,0}} dot(%a, %b), "
+            f"lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}")
+    parsed = _parse_op_line(line)
+    assert parsed is not None
+    name, type_str, opcode, rest = parsed
+    assert opcode == "dot" and _type_bytes(type_str) == m * n * 4
+
+
+def test_parse_op_line_tuple_type_with_comment():
+    line = ("  %while.1 = (s32[], bf16[2,3]{1,0}, /*index=5*/ f32[4]{0}) "
+            "while(%t), condition=%c.1, body=%b.2")
+    name, type_str, opcode, rest = _parse_op_line(line)
+    assert opcode == "while"
+    assert "condition=%c.1" in rest
+    assert _type_bytes(type_str) == 4 + 12 + 16

@@ -1,0 +1,118 @@
+"""HLO cost-analysis + roofline tests: analytic cross-checks of the
+call-graph-weighted FLOP/byte/collective accounting."""
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as HA
+from repro.launch import roofline as RF
+from repro import configs
+
+
+SIMPLE_HLO = textwrap.dedent("""\
+    HloModule test
+
+    %body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+      %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add.red
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %ar)
+    }
+
+    %cond.1 (p2: (s32[], f32[8,8])) -> pred[] {
+      %p2 = (s32[], f32[8,8]{1,0}) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i2, %n), direction=LT
+    }
+
+    %add.red (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (arg: f32[8,8]) -> f32[8,8] {
+      %arg = f32[8,8]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,8]{1,0}) tuple(%zero, %arg)
+      %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond.1, body=%body.1
+      %big = f32[128,64]{1,0} dot(%arg, %arg), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+class TestHloAnalysis:
+    def test_loop_weighted_flops(self):
+        hc = HA.analyze_hlo_text(SIMPLE_HLO)
+        # loop body dot: 2*8*8*8 = 1024 flops x 10 trips; entry dot:
+        # 2*128*64*8 = 131072 x 1
+        assert hc.loop_trips == {"body.1": 10}
+        assert hc.flops == pytest.approx(1024 * 10 + 2 * 128 * 64 * 8)
+
+    def test_loop_weighted_collectives(self):
+        hc = HA.analyze_hlo_text(SIMPLE_HLO)
+        # all-reduce of f32[8,8] = 256B x 10 trips
+        assert hc.collective_bytes["all-reduce"] == 256 * 10
+        assert hc.collective_counts["all-reduce"] == 10
+
+    def test_traffic_counts_dots_and_entry_io(self):
+        hc = HA.analyze_hlo_text(SIMPLE_HLO)
+        # per-trip dot traffic: result 256 + 2x operand 256 = 768
+        # entry dot: 32768 + 2*256 = 33280 ; entry param io = 2*256
+        assert hc.hbm_bytes == pytest.approx(768 * 10 + 33280 + 2 * 256)
+
+
+class TestRooflineTerms:
+    def test_model_flops_train_vs_decode(self):
+        cfg = configs.get_config("phi3-mini-3.8b")
+        from repro.common.config import SHAPES
+        t = RF.model_flops(cfg, SHAPES["train_4k"])
+        d = RF.model_flops(cfg, SHAPES["decode_32k"])
+        n = RF.active_param_count(cfg)
+        assert t == pytest.approx(6 * n * 256 * 4096)
+        assert d == pytest.approx(2 * n * 128)
+
+    def test_moe_active_params_smaller_than_total(self):
+        cfg = configs.get_config("dbrx-132b")
+        from repro.models import lm
+        active = RF.active_param_count(cfg)
+        total = lm.param_count(cfg)
+        # 16 experts top-4 -> expert params scale by 1/4
+        assert active < 0.45 * total
+
+    def test_dominant_term_classification(self):
+        class FakeCompiled:
+            def as_text(self):
+                return SIMPLE_HLO
+            def cost_analysis(self):
+                return {}
+        rl = RF.analyze(FakeCompiled(), n_chips=4, scan_trip_count=10,
+                        model_flops_global=1e6)
+        assert rl.dominant in ("compute", "memory", "collective")
+        assert rl.compute_s >= 0 and rl.collective_s > 0
+
+
+class TestDryrunConsistency:
+    """The committed dry-run artifacts must cover every assigned cell."""
+
+    def test_results_cover_all_cells(self):
+        import json, os
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "benchmarks", "results", "dryrun.json")
+        if not os.path.exists(path):
+            pytest.skip("dry-run artifacts not generated yet")
+        with open(path) as f:
+            recs = json.load(f)
+        have = {(r["arch"], r["shape"], r["mesh"]) for r in recs}
+        for arch, shape in configs.all_cells():
+            assert (arch, shape, "single") in have, (arch, shape, "single")
+        # multi-pod coverage (filled in by the final sweep)
+        multi = [c for c in have if c[2] == "multi"]
+        assert len(multi) >= 1

@@ -1,0 +1,159 @@
+"""Unit tests for the FedCostAware core: estimators, Listing-1 logic,
+budget adherence, dynamic schedule adjustment."""
+import math
+
+import pytest
+
+from repro.common.config import SchedulerConfig
+from repro.core.budget import BudgetLedger
+from repro.core.estimator import EMA, TimeEstimator
+from repro.core.scheduler import FedCostAwareScheduler
+
+
+def make_sched(alpha=0.5, threshold=100.0, buffer=30.0, spin_prior=120.0):
+    est = TimeEstimator(alpha, spin_up_prior=spin_prior)
+    ledger = BudgetLedger()
+    cfg = SchedulerConfig(ema_alpha=alpha, t_threshold_s=threshold,
+                          t_buffer_s=buffer, calibration_rounds=2)
+    return FedCostAwareScheduler(cfg, est, ledger)
+
+
+class TestEMA:
+    def test_first_observation_initializes(self):
+        e = EMA(0.3)
+        assert e.get(5.0) == 5.0
+        e.update(10.0)
+        assert e.value == 10.0
+
+    def test_ema_smoothing(self):
+        e = EMA(0.25)
+        e.update(100.0)
+        e.update(200.0)
+        assert e.value == pytest.approx(0.25 * 200 + 0.75 * 100)
+
+    def test_estimator_cold_warm_separate(self):
+        t = TimeEstimator(0.5)
+        t.observe_epoch("c", 100.0, cold=True)
+        t.observe_epoch("c", 60.0, cold=False)
+        m = t.model("c")
+        assert m.predict_epoch(cold=True) == 100.0
+        assert m.predict_epoch(cold=False) == 60.0
+
+    def test_fallback_between_cold_and_warm(self):
+        t = TimeEstimator(0.5)
+        t.observe_epoch("c", 80.0, cold=False)
+        assert t.model("c").predict_epoch(cold=True) == 80.0
+
+
+class TestListing1:
+    """evaluate_termination / estimate_slowest_finish_time (paper Listing 1)."""
+
+    def _setup_round(self, s, finishes):
+        s.begin_round(5)   # past calibration
+        for name, (start, cold) in finishes.items():
+            s.register_dispatch(name, start, cold, includes_spin_up=False)
+
+    def test_no_termination_during_calibration(self):
+        s = make_sched()
+        s.begin_round(0)
+        s.register_dispatch("a", 0.0, True, False)
+        s.register_dispatch("b", 0.0, True, False)
+        s.est.observe_epoch("b", 1000.0, cold=True)
+        assert s.evaluate_termination("a", 10.0, more_rounds=True) is None
+
+    def test_terminates_when_idle_exceeds_threshold(self):
+        s = make_sched(threshold=100.0, buffer=30.0, spin_prior=120.0)
+        s.est.observe_epoch("slow", 1000.0, cold=False)
+        s.est.observe_epoch("fast", 100.0, cold=False)
+        s.est.observe_spin_up("fast", 120.0)
+        self._setup_round(s, {"slow": (0.0, False), "fast": (0.0, False)})
+        # fast finishes at t=100; slow's estimated finish = 1000
+        # idle = 900; 900 - 120 > 100 -> terminate
+        prewarm = s.evaluate_termination("fast", 100.0, more_rounds=True)
+        assert prewarm is not None
+        # spin_up_start = F_s - spin - buffer = 1000 - 120 - 30
+        assert prewarm == pytest.approx(850.0)
+        assert s.prewarm_queue["fast"] == pytest.approx(850.0)
+
+    def test_keeps_instance_when_saving_below_threshold(self):
+        s = make_sched(threshold=100.0, spin_prior=120.0)
+        s.est.observe_epoch("slow", 300.0, cold=False)
+        s.est.observe_epoch("fast", 100.0, cold=False)
+        self._setup_round(s, {"slow": (0.0, False), "fast": (0.0, False)})
+        # idle = 200; 200 - 120 = 80 < 100 -> keep running
+        assert s.evaluate_termination("fast", 100.0, more_rounds=True) is None
+
+    def test_no_prewarm_on_last_round(self):
+        s = make_sched(threshold=10.0, spin_prior=60.0)
+        s.est.observe_epoch("slow", 1000.0, cold=False)
+        s.est.observe_epoch("fast", 50.0, cold=False)
+        self._setup_round(s, {"slow": (0.0, False), "fast": (0.0, False)})
+        out = s.evaluate_termination("fast", 50.0, more_rounds=False)
+        assert out == math.inf and "fast" not in s.prewarm_queue
+
+    def test_slowest_finish_uses_cold_estimate_for_cold_clients(self):
+        s = make_sched()
+        s.est.observe_epoch("c", 500.0, cold=True)
+        s.est.observe_epoch("c", 200.0, cold=False)
+        s.begin_round(5)
+        s.register_dispatch("c", 100.0, cold=True, includes_spin_up=False)
+        assert s.estimate_finish("c") == pytest.approx(600.0)
+        s.states["c"].is_cold_start = False
+        assert s.estimate_finish("c") == pytest.approx(300.0)
+
+    def test_includes_spin_up_in_estimate(self):
+        s = make_sched(spin_prior=120.0)
+        s.est.observe_epoch("c", 200.0, cold=True)
+        s.begin_round(5)
+        s.register_dispatch("c", 0.0, cold=True, includes_spin_up=True)
+        assert s.estimate_finish("c") == pytest.approx(320.0)
+
+
+class TestDynamicAdjustment:
+    """§III-D: preemption recovery pushes back pre-warm targets."""
+
+    def test_prewarms_move_later_on_recovery(self):
+        s = make_sched(threshold=10.0, buffer=30.0, spin_prior=120.0)
+        for c, t in [("a", 1000.0), ("b", 100.0), ("crash", 800.0)]:
+            s.est.observe_epoch(c, t, cold=False)
+            s.est.observe_spin_up(c, 120.0)
+        s.begin_round(5)
+        for c in ("a", "b", "crash"):
+            s.register_dispatch(c, 0.0, False, False)
+        s.evaluate_termination("b", 100.0, more_rounds=True)
+        orig = s.prewarm_queue["b"]
+        # crash recovers and will now finish at t=2000 (> a's 1000)
+        moved = s.on_preemption_recovery("crash", 2000.0)
+        assert moved["b"] > orig
+        assert moved["b"] == pytest.approx(2000.0 - 120.0 - 30.0)
+
+    def test_recovery_earlier_than_slowest_no_move(self):
+        s = make_sched(threshold=10.0, buffer=30.0, spin_prior=120.0)
+        for c, t in [("a", 1000.0), ("b", 100.0)]:
+            s.est.observe_epoch(c, t, cold=False)
+            s.est.observe_spin_up(c, 120.0)
+        s.begin_round(5)
+        for c in ("a", "b"):
+            s.register_dispatch(c, 0.0, False, False)
+        s.evaluate_termination("b", 100.0, more_rounds=True)
+        moved = s.on_preemption_recovery("b", 500.0)   # before a's 1000
+        assert moved == {}
+
+
+class TestBudget:
+    def test_exclusion_is_permanent(self):
+        l = BudgetLedger()
+        l.register("a", 1.0)
+        l.register("b", 10.0)
+        l.sync_spend("a", 0.95)
+        keep = l.screen_round(["a", "b"], lambda c: 0.10)
+        assert keep == ["b"] and l.is_excluded("a")
+        l.sync_spend("a", 0.0)   # even with budget back, stays excluded
+        keep = l.screen_round(["a", "b"], lambda c: 0.0)
+        assert keep == ["b"]
+
+    def test_affordable_client_participates(self):
+        l = BudgetLedger()
+        l.register("a", 5.0)
+        l.sync_spend("a", 1.0)
+        assert l.screen_round(["a"], lambda c: 3.99) == ["a"]

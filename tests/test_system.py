@@ -1,0 +1,39 @@
+"""System-level behaviour tests: the paper's headline claims hold
+end-to-end through the full stack (simulator + scheduler + policies)."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.table1 import ROWS, run_row   # noqa: E402
+
+
+@pytest.mark.parametrize("row", ROWS, ids=[r.dataset for r in ROWS])
+def test_table1_reproduction_within_tolerance(row):
+    """Every Table I cell within 2% of the paper's reported cost."""
+    for policy in ("on_demand", "spot", "fedcostaware"):
+        res = run_row(row, policy)
+        rel = abs(res.total_cost - row.target[policy]) / row.target[policy]
+        assert rel < 0.02, (row.dataset, policy, res.total_cost,
+                            row.target[policy])
+
+
+@pytest.mark.parametrize("row", ROWS, ids=[r.dataset for r in ROWS])
+def test_savings_ordering(row):
+    od = run_row(row, "on_demand").total_cost
+    sp = run_row(row, "spot").total_cost
+    fca = run_row(row, "fedcostaware").total_cost
+    assert fca < sp < od
+    # spot saving is the price ratio (paper: ~60.8%)
+    assert 1 - sp / od == pytest.approx(
+        1 - row.spot_rate / row.od_rate, abs=0.01)
+
+
+def test_headline_peak_saving():
+    """Paper abstract: 'up to 72.22% cost savings' (CIFAR-10 row)."""
+    row = next(r for r in ROWS if r.dataset == "CIFAR-10")
+    od = run_row(row, "on_demand").total_cost
+    fca = run_row(row, "fedcostaware").total_cost
+    assert 100 * (1 - fca / od) == pytest.approx(72.22, abs=1.0)
