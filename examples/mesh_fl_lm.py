@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.common import compat
 from repro.data.synthetic import token_stream
 from repro.fl import mesh_fl
 from repro.models import lm
@@ -46,7 +47,7 @@ round_step = jax.jit(round_step)
 streams = [token_stream(cfg.vocab_size, B_LOCAL, SEQ, seed=i)
            for i in range(N_CLIENTS)]
 
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     for r in range(ROUNDS):
         batch = {
             "tokens": jnp.stack([

@@ -37,7 +37,7 @@ profiles = tuple(
                   n_samples=len(parts[i]))
     for i in range(3))
 
-for policy in ("on_demand", "spot", "fedcostaware"):
+for policy in ("on_demand", "spot", "fedcostaware", "fedcostaware_async"):
     server = FederatedServer(params)
     hooks = JaxTrainerHooks(server, clients)
     cfg = FLRunConfig(dataset="mnist", clients=profiles, n_epochs=5,

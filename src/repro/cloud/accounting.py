@@ -1,0 +1,85 @@
+"""Incremental per-client cost accounting driven by billing events.
+
+The seed implementation answered every `client_cost` query with a full
+scan over *all instances ever created* (O(n) per query, O(n^2) across a
+run's cost-curve recording). `CostAccountant` subscribes to the event
+bus and folds each closed billing segment into per-client totals as it
+happens, so `client_cost` / `total_cost` only have to price the (at most
+one per client) still-open billing segment:
+
+  closed cost  — accumulated from `BillingTick` events, O(1) amortized
+  open segment — priced on demand from the instance's billing start to
+                 `clock()`; there are at most O(#clients) open segments
+                 alive at any instant, independent of run length.
+
+`benchmarks/accounting_bench.py` measures the gap at 100 clients x 200
+rounds.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Dict, Set
+
+from repro.core.events import (BillingTick, EventBus, InstancePreempted,
+                               InstanceReady, InstanceTerminated)
+from repro.cloud.pricing import PriceBook
+
+
+class CostAccountant:
+    def __init__(self, bus: EventBus, prices: PriceBook,
+                 clock: Callable[[], float]):
+        self._prices = prices
+        self._clock = clock
+        self._closed: Dict[str, float] = defaultdict(float)
+        self._closed_total = 0.0
+        self._open: Dict[int, object] = {}          # iid -> Instance
+        self._open_by_client: Dict[str, Set[int]] = defaultdict(set)
+        bus.subscribe(InstanceReady, self._on_ready)
+        bus.subscribe(BillingTick, self._on_billing)
+        bus.subscribe(InstanceTerminated, self._on_closed)
+        bus.subscribe(InstancePreempted, self._on_closed)
+
+    # ------------------------------------------------------------------
+    # Event handlers.
+    # ------------------------------------------------------------------
+    def _on_ready(self, ev: InstanceReady):
+        inst = ev.instance
+        self._open[inst.iid] = inst
+        self._open_by_client[inst.client].add(inst.iid)
+
+    def _on_billing(self, ev: BillingTick):
+        self._closed[ev.client] += ev.amount
+        self._closed_total += ev.amount
+        self._drop_open(ev.instance)
+
+    def _on_closed(self, ev):
+        # terminated-while-spinning instances never opened a segment;
+        # terminate/preempt after RUNNING already closed via BillingTick.
+        self._drop_open(ev.instance)
+
+    def _drop_open(self, inst):
+        if self._open.pop(inst.iid, None) is not None:
+            self._open_by_client[inst.client].discard(inst.iid)
+
+    # ------------------------------------------------------------------
+    # Queries.
+    # ------------------------------------------------------------------
+    def _open_cost(self, inst) -> float:
+        t0 = inst._billing_from
+        if t0 is None:
+            return 0.0
+        return self._prices.cost(inst.zone, t0, self._clock(),
+                                 inst.on_demand)
+
+    def client_cost(self, client: str) -> float:
+        return (self._closed[client]
+                + sum(self._open_cost(self._open[i])
+                      for i in self._open_by_client[client]))
+
+    def total_cost(self) -> float:
+        return (self._closed_total
+                + sum(self._open_cost(i) for i in self._open.values()))
+
+    def per_client(self) -> Dict[str, float]:
+        clients = set(self._closed) | set(self._open_by_client)
+        return {c: self.client_cost(c) for c in clients}

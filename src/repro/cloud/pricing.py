@@ -9,7 +9,6 @@ to the paper's observed g5.xlarge rates (on-demand $1.008/hr, spot
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -43,23 +42,27 @@ class SpotPriceTrace:
             p = p + reversion * (mean - p) + rng.randn() * sigma
         self._step = step_s
         self._prices = prices
+        # prefix sums: _cum[i] = integral over the first i full steps,
+        # making `integral` O(1) instead of O(steps spanned) — it sits on
+        # the billing hot path (every cost query prices an open segment).
+        self._cum = np.concatenate([[0.0], np.cumsum(prices) * step_s])
 
     def price(self, t: float) -> float:
         i = min(int(t / self._step), len(self._prices) - 1)
         return float(self._prices[i])
 
+    def _antiderivative(self, t: float) -> float:
+        """Integral of the trace over [0, t]; beyond the horizon the last
+        step's price extends (matching `price`'s clamped lookup)."""
+        i = min(int(t / self._step), len(self._prices) - 1)
+        return float(self._cum[i]
+                     + self._prices[i] * (t - i * self._step))
+
     def integral(self, t0: float, t1: float) -> float:
         """Integral of price over [t0, t1] in $·s/hr (divide by 3600 for $)."""
         if t1 <= t0:
             return 0.0
-        total = 0.0
-        t = t0
-        while t < t1:
-            step_end = (math.floor(t / self._step) + 1) * self._step
-            seg_end = min(step_end, t1)
-            total += self.price(t) * (seg_end - t)
-            t = seg_end
-        return total
+        return self._antiderivative(t1) - self._antiderivative(t0)
 
 
 class PriceBook:

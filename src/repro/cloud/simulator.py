@@ -6,6 +6,11 @@ paper. The FedCostAware scheduler interacts with it through exactly the
 operations the paper's scheduler uses: request instance (in a chosen
 zone), terminate instance, observe ready/preempt events, read accrued
 cost.
+
+Lifecycle notifications are published as typed events on an `EventBus`
+(`repro.core.events`) — the simulator takes no per-request callbacks, so
+any number of consumers (cluster manager, cost accountant, loggers) can
+observe the same run without threading closures through call sites.
 """
 from __future__ import annotations
 
@@ -19,6 +24,9 @@ import numpy as np
 
 from repro.common.config import CloudConfig
 from repro.cloud.pricing import PriceBook
+from repro.core.events import (BillingTick, EventBus, InstancePreempted,
+                               InstanceReady, InstanceRequested,
+                               InstanceTerminated)
 
 # Instance states
 REQUESTED, SPINNING_UP, RUNNING, TERMINATED, PREEMPTED = (
@@ -43,13 +51,15 @@ class CloudSimulator:
     """Event-driven cloud with billing.
 
     Events are (time, seq, callback) on a heap; callbacks may schedule
-    further events. `run_until_idle` drains the heap.
+    further events. `run_until_idle` drains the heap. Lifecycle
+    transitions are published on `self.bus`.
     """
 
     def __init__(self, cfg: CloudConfig, prices: Optional[PriceBook] = None,
-                 seed: int = 0):
+                 seed: int = 0, bus: Optional[EventBus] = None):
         self.cfg = cfg
         self.prices = prices or PriceBook(cfg, seed=seed)
+        self.bus = bus or EventBus()
         self.now = 0.0
         self._heap: List = []
         self._seq = itertools.count()
@@ -85,16 +95,14 @@ class CloudSimulator:
         return float(np.exp(mu + self._rng.randn() * self.cfg.spin_up_sigma))
 
     def request_instance(self, client: str, zone: Optional[str] = None,
-                         on_demand: bool = False,
-                         on_ready: Optional[Callable[["Instance"], None]] = None,
-                         on_preempt: Optional[Callable[["Instance"], None]] = None,
-                         ) -> Instance:
+                         on_demand: bool = False) -> Instance:
         if zone is None:
             zone, _ = self.prices.cheapest_zone(self.now)
         inst = Instance(next(self._iid), client, zone, on_demand, self.now)
         self._instances[inst.iid] = inst
         spin = self.sample_spin_up()
         self._log("request", inst)
+        self.bus.publish(InstanceRequested(self.now, inst))
 
         def ready():
             if inst.state != SPINNING_UP:        # terminated while spinning
@@ -104,28 +112,30 @@ class CloudSimulator:
             inst._billing_from = self.now
             self._log("ready", inst)
             if not inst.on_demand and self.cfg.preemption_rate_per_hr > 0:
-                self._schedule_preemption(inst, on_preempt)
-            if on_ready:
-                on_ready(inst)
+                self._schedule_preemption(inst)
+            self.bus.publish(InstanceReady(self.now, inst))
 
         self.schedule_in(spin, ready)
         return inst
 
-    def _schedule_preemption(self, inst: Instance, on_preempt):
+    def _schedule_preemption(self, inst: Instance):
         rate = self.cfg.preemption_rate_per_hr / 3600.0
         delay = float(self._rng.exponential(1.0 / rate))
+        self.schedule_in(delay, lambda: self.preempt(inst))
 
-        def preempt():
-            if inst.state != RUNNING:
-                return
-            self._finalize_billing(inst)
-            inst.state = PREEMPTED
-            inst.t_end = self.now
-            self._log("preempt", inst)
-            if on_preempt:
-                on_preempt(inst)
-
-        self.schedule_in(delay, preempt)
+    def preempt(self, inst: Instance) -> bool:
+        """Spot reclaim. A no-op unless the instance is RUNNING — in
+        particular, a preemption arriving while the instance is still
+        SPINNING_UP neither bills nor changes state. Returns True if the
+        instance was actually reclaimed."""
+        if inst.state != RUNNING:
+            return False
+        self._finalize_billing(inst)
+        inst.state = PREEMPTED
+        inst.t_end = self.now
+        self._log("preempt", inst)
+        self.bus.publish(InstancePreempted(self.now, inst))
+        return True
 
     def terminate(self, inst: Instance):
         """Custom terminate-specific-node API (paper §III-C)."""
@@ -136,6 +146,7 @@ class CloudSimulator:
         inst.state = TERMINATED
         inst.t_end = self.now
         self._log("terminate", inst)
+        self.bus.publish(InstanceTerminated(self.now, inst))
 
     # ------------------------------------------------------------------
     # Billing.
@@ -147,9 +158,12 @@ class CloudSimulator:
         t1 = self.now
         billed = max(t1 - t0, self.cfg.min_billing_s if not inst.on_demand
                      else 0.0)
-        inst.cost += self.prices.cost(inst.zone, t0, t0 + billed,
-                                      inst.on_demand)
+        amount = self.prices.cost(inst.zone, t0, t0 + billed,
+                                  inst.on_demand)
+        inst.cost += amount
         inst._billing_from = None
+        self.bus.publish(BillingTick(self.now, inst, inst.client,
+                                     t0, t0 + billed, amount))
 
     def accrued_cost(self, inst: Instance) -> float:
         """Cost so far including the open billing segment."""
@@ -160,10 +174,14 @@ class CloudSimulator:
         return c
 
     def client_cost(self, client: str) -> float:
+        """Legacy O(all instances) scan. Hot paths should query a
+        `repro.cloud.accounting.CostAccountant` subscribed to the bus
+        instead (see benchmarks/accounting_bench.py for the gap)."""
         return sum(self.accrued_cost(i) for i in self._instances.values()
                    if i.client == client)
 
     def total_cost(self) -> float:
+        """Legacy O(all instances) scan; see `client_cost`."""
         return sum(self.accrued_cost(i) for i in self._instances.values())
 
     def instances_of(self, client: str) -> List[Instance]:

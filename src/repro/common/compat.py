@@ -1,0 +1,41 @@
+"""JAX version-compatibility shims.
+
+The mesh / shard_map APIs moved between JAX releases:
+
+  * ``jax.set_mesh``       — new; older releases have
+    ``jax.sharding.use_mesh``, and before that ``Mesh`` itself is the
+    context manager.
+  * ``jax.shard_map``      — new (with ``check_vma``); older releases
+    ship ``jax.experimental.shard_map.shard_map`` (with ``check_rep``).
+
+All repro code (and tests/examples) route through these wrappers so the
+code base runs unmodified across the JAX versions we encounter.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager making `mesh` the ambient mesh for jit/shard_map.
+
+    Prefers ``jax.set_mesh``, falls back to ``jax.sharding.use_mesh``,
+    and finally to entering the ``Mesh`` object itself (the pre-0.5 API).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh          # Mesh is a context manager in older JAX
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` if present, else the experimental spelling with
+    ``check_vma`` translated to the old ``check_rep`` keyword."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

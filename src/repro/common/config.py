@@ -247,9 +247,14 @@ class FLRunConfig:
     dataset: str
     clients: Tuple[ClientProfile, ...]
     n_epochs: int                   # global FL rounds (1 local epoch each)
-    policy: str = "fedcostaware"    # on_demand | spot | fedcostaware
+    # on_demand | spot | fedcostaware | fedcostaware_async
+    policy: str = "fedcostaware"
     algorithm: str = "fedavg"       # fedavg | fedprox | fedavgm
     fedprox_mu: float = 0.01
     server_momentum: float = 0.9
     local_steps: Optional[int] = None  # mesh-FL: steps per round
+    # async (FedBuff-style) engines: aggregate once `buffer_k` client
+    # results arrive; None -> n_clients - 1 (wait for all but the
+    # slowest). Ignored by the synchronous engine.
+    buffer_k: Optional[int] = None
     seed: int = 0

@@ -1,0 +1,126 @@
+"""Typed event bus connecting the cloud / cluster / engine layers.
+
+The FedCostAware stack is layered (PR: multi-layer refactor):
+
+  CloudSimulator   -- publishes cloud-level events (InstanceReady,
+                      InstancePreempted, InstanceTerminated, BillingTick)
+  ClusterManager   -- subscribes to cloud events, owns instance
+                      lifecycle, re-publishes client-level events
+                      (ClientReady, ClientLost)
+  RoundEngine      -- subscribes to client events, owns FL-round
+                      semantics (sync barrier / async buffered)
+  CostAccountant   -- subscribes to billing events, maintains per-client
+                      accrued cost incrementally (O(1) queries)
+
+Events are frozen dataclasses dispatched by exact type. Publishing is
+synchronous: `publish` invokes every subscriber before returning, so the
+discrete-event simulator's deterministic ordering (heap + FIFO sequence
+numbers) is preserved — a handler that schedules follow-up events does so
+in the same order a direct callback would have.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Type
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base class for all bus events; `t` is simulated time (seconds)."""
+    t: float
+
+
+# ---------------------------------------------------------------------------
+# Cloud-layer events (published by CloudSimulator).
+# `instance` fields are `repro.cloud.simulator.Instance`; typed as Any to
+# keep the core layer free of cloud imports.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InstanceRequested(Event):
+    instance: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceReady(Event):
+    """Instance finished spinning up; billing starts now."""
+    instance: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class InstancePreempted(Event):
+    """Spot market reclaimed a RUNNING instance (billing already closed)."""
+    instance: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceTerminated(Event):
+    """Deliberate terminate (paper's terminate-specific-node API)."""
+    instance: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BillingTick(Event):
+    """A billing segment [t0, t1) closed, charging `amount` dollars.
+
+    Emitted whenever the simulator finalizes billing (terminate or
+    preemption); `t1 - t0` already includes the min-billing floor.
+    """
+    instance: Any
+    client: str
+    t0: float
+    t1: float
+    amount: float
+
+
+# ---------------------------------------------------------------------------
+# Cluster-layer events (published by ClusterManager). Only fired for
+# instances the cluster currently tracks — stale cloud events (e.g. a
+# preemption racing a deliberate replace) are filtered out below this
+# layer, so engines never see them.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ClientReady(Event):
+    """The client's tracked instance became RUNNING.
+
+    `resume_token` carries engine-opaque recovery state when this ready
+    answers a resume-from-checkpoint request (set via
+    `ClusterManager.request(..., resume_token=...)`), else None.
+    """
+    client: str
+    instance: Any
+    cold: bool
+    resume_token: Optional[Any] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientLost(Event):
+    """The client's tracked instance was preempted (cluster already
+    dropped it; the engine decides whether/how to recover)."""
+    client: str
+    instance: Any
+
+
+# ---------------------------------------------------------------------------
+# Bus.
+# ---------------------------------------------------------------------------
+Handler = Callable[[Event], None]
+
+
+class EventBus:
+    """Minimal synchronous pub/sub keyed by exact event type."""
+
+    def __init__(self):
+        self._subs: Dict[Type[Event], List[Handler]] = defaultdict(list)
+
+    def subscribe(self, etype: Type[Event], handler: Handler) -> Handler:
+        self._subs[etype].append(handler)
+        return handler
+
+    def unsubscribe(self, etype: Type[Event], handler: Handler) -> None:
+        self._subs[etype].remove(handler)
+
+    def publish(self, event: Event) -> None:
+        # snapshot: a handler may (un)subscribe while we iterate
+        for h in list(self._subs[type(event)]):
+            h(event)

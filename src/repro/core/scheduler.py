@@ -13,6 +13,7 @@ Implements, against the simulated cloud:
 The scheduler is policy-pluggable: the OnDemand / PlainSpot baselines in
 `repro.core.policies` share this interface but disable lifecycle
 management, which is exactly the paper's Table I comparison.
+
 """
 from __future__ import annotations
 
@@ -38,8 +39,13 @@ class RoundClientState:
 
 
 class FedCostAwareScheduler:
-    """Pure decision logic; side effects (terminate/spin-up) are delegated
-    to callables supplied by the runner so the scheduler stays testable.
+    """Pure decision logic with no side effects: round engines
+    (`repro.fl.engines`) consume the decisions and the cluster manager
+    (`repro.fl.cluster`) executes them (terminate / pre-warm spin-ups),
+    so the scheduler stays independently testable and engine-agnostic —
+    the async buffered engine reuses the estimator EMAs and §III-E
+    budget screening while skipping the barrier-specific Listing-1
+    calls.
     """
 
     def __init__(self, cfg: SchedulerConfig, estimator: TimeEstimator,

@@ -1,0 +1,132 @@
+"""ClusterManager: instance lifecycle for FL clients.
+
+Sits between the cloud simulator and the round engines. It consumes the
+cloud-level bus events (`InstanceReady`, `InstancePreempted`), filters
+out stale ones (an event for an instance the cluster no longer tracks is
+dropped here, so engines never have to guard against races), and
+re-publishes client-level events (`ClientReady`, `ClientLost`).
+
+Owns, per client:
+  * the tracked instance (at most one),
+  * freshness (has the instance completed an epoch yet — drives the
+    cold/warm duration split and the spin-up observations),
+  * pre-warm scheduling with generation counters (a re-issued pre-warm
+    invalidates the previous one) honoring §III-D queue adjustments,
+  * resume-from-checkpoint requests: `request(..., resume_token=...)`
+    stamps the replacement instance so the engine can distinguish a
+    recovery ready from a fresh dispatch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.cloud.simulator import CloudSimulator, Instance
+from repro.common.config import ClientProfile
+from repro.core.events import (ClientLost, ClientReady, InstancePreempted,
+                               InstanceReady)
+from repro.core.policies import Policy
+from repro.core.scheduler import FedCostAwareScheduler
+from repro.fl.telemetry import TimelineRecorder
+
+
+class ClusterManager:
+    def __init__(self, sim: CloudSimulator, policy: Policy,
+                 profiles: Dict[str, ClientProfile],
+                 scheduler: FedCostAwareScheduler,
+                 timeline: TimelineRecorder):
+        self.sim = sim
+        self.policy = policy
+        self.profiles = profiles
+        self.scheduler = scheduler
+        self.timeline = timeline
+        self.instances: Dict[str, Optional[Instance]] = {
+            c: None for c in profiles}
+        self._fresh: Dict[int, bool] = {}       # iid -> no epoch done yet
+        self._resume_tokens: Dict[int, Any] = {}  # iid -> engine payload
+        self._prewarm_gen: Dict[str, int] = {}
+        self._shutdown = False
+        sim.bus.subscribe(InstanceReady, self._on_instance_ready)
+        sim.bus.subscribe(InstancePreempted, self._on_instance_preempted)
+
+    # ------------------------------------------------------------------
+    # Requests / termination.
+    # ------------------------------------------------------------------
+    def request(self, client: str, resume_token: Any = None) -> Instance:
+        """Request a fresh instance for `client` in its pinned zone, or
+        the currently-cheapest zone under cheapest-zone policies."""
+        prof = self.profiles[client]
+        zone = prof.zone
+        if zone is None and self.policy.pick_cheapest_zone:
+            zone, _ = self.sim.prices.cheapest_zone(self.sim.now)
+        inst = self.sim.request_instance(client, zone=zone,
+                                         on_demand=self.policy.on_demand)
+        self.instances[client] = inst
+        self._fresh[inst.iid] = True
+        if resume_token is not None:
+            self._resume_tokens[inst.iid] = resume_token
+        self.timeline.mark(client, "spinup")
+        return inst
+
+    def terminate(self, client: str) -> Optional[Instance]:
+        inst = self.instances.get(client)
+        if inst is not None:
+            self.sim.terminate(inst)
+            self.instances[client] = None
+        return inst
+
+    def instance_of(self, client: str) -> Optional[Instance]:
+        return self.instances.get(client)
+
+    def shutdown(self):
+        """Stop honoring queued pre-warm fires (end of run)."""
+        self._shutdown = True
+
+    # ------------------------------------------------------------------
+    # Freshness (cold/warm) bookkeeping.
+    # ------------------------------------------------------------------
+    def is_fresh(self, iid: int) -> bool:
+        return self._fresh.get(iid, True)
+
+    def mark_warm(self, iid: int):
+        self._fresh[iid] = False
+
+    # ------------------------------------------------------------------
+    # Pre-warming (scheduler decision -> future spin-up).
+    # ------------------------------------------------------------------
+    def schedule_prewarm(self, client: str, t: float):
+        gen = self._prewarm_gen.get(client, 0) + 1
+        self._prewarm_gen[client] = gen
+
+        def fire():
+            if self._prewarm_gen.get(client) != gen or self._shutdown:
+                return
+            # stale if queue entry moved later (§III-D adjustment)
+            q_t = self.scheduler.prewarm_queue.get(client)
+            if q_t is not None and q_t > self.sim.now + 1e-6:
+                self.schedule_prewarm(client, q_t)
+                return
+            if self.instances.get(client) is None:
+                self.request(client)
+
+        self.sim.schedule(max(t, self.sim.now), fire)
+
+    # ------------------------------------------------------------------
+    # Cloud-event translation.
+    # ------------------------------------------------------------------
+    def _on_instance_ready(self, ev: InstanceReady):
+        inst = ev.instance
+        client = inst.client
+        if self.instances.get(client) is not inst:
+            return                              # stale: no longer tracked
+        token = self._resume_tokens.pop(inst.iid, None)
+        self.sim.bus.publish(ClientReady(
+            ev.t, client, inst, self.is_fresh(inst.iid), token))
+
+    def _on_instance_preempted(self, ev: InstancePreempted):
+        inst = ev.instance
+        client = inst.client
+        cur = self.instances.get(client)
+        if cur is None or cur.iid != inst.iid:
+            return                              # stale: already replaced
+        self.instances[client] = None
+        self.sim.bus.publish(ClientLost(ev.t, client, inst))

@@ -1,0 +1,199 @@
+"""AsyncBufferedEngine: FedBuff-style buffered asynchronous rounds.
+
+A workload the synchronous barrier cannot express: the server aggregates
+as soon as `K = buffer_k` client results are buffered (default: all but
+one client), then immediately opens the next round. Clients never wait
+at a barrier — each one is re-dispatched on the freshest global model
+the moment its previous epoch finishes, and a straggler's in-flight
+result simply rolls into whichever round's buffer is open when it lands
+(FedBuff, arXiv:2106.06639; staleness weighting is left to the
+aggregation hooks).
+
+Cost behavior: instances are never idle-at-the-barrier, so there is
+nothing for Listing-1 terminate/pre-warm decisions to reclaim — the
+saving comes from finishing the same number of aggregations in far less
+wall-clock (lower makespan => fewer billed instance-seconds for the fast
+clients' peers). Budget screening (§III-E) still runs at every round
+boundary, and per-client spend is tracked by the same `CostAccountant`
+as the sync engine.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.events import ClientLost, ClientReady
+from repro.fl.engines.base import BaseEngine, EngineContext
+
+
+class AsyncBufferedEngine(BaseEngine):
+    name = "async_buffered"
+
+    def __init__(self, ctx: EngineContext):
+        super().__init__(ctx)
+        n = len(self.profiles)
+        k = ctx.run_cfg.buffer_k
+        self.buffer_k = max(1, min(k if k is not None else n - 1, n))
+        self._buffer: List[str] = []       # results awaiting aggregation
+        self._active: List[str] = []       # participating clients, ordered
+        self._task: Dict[str, int] = {}    # client -> in-flight task iid
+        self._train_start: Dict[str, float] = {}
+        self._train_duration: Dict[str, float] = {}
+        self._resumed: set = set()            # partial epochs: skip EMAs
+        self._pending_dispatch: set = set()   # waiting for instance ready
+
+    # ------------------------------------------------------------------
+    def start(self):
+        self.sim.schedule(0.0, self._launch)
+
+    def _launch(self):
+        self._round_idx = 0
+        for c, p in self.profiles.items():
+            if p.join_round <= 0:
+                self._join(c)
+
+    def _join(self, c: str):
+        self._active.append(c)
+        self._dispatch(c)
+
+    # ------------------------------------------------------------------
+    # Dispatch / local training.
+    # ------------------------------------------------------------------
+    def _dispatch(self, c: str):
+        inst = self.cluster.instance_of(c)
+        if inst is not None and inst.t_ready is not None:
+            self._begin_training(c, cold=self.cluster.is_fresh(inst.iid))
+        else:
+            self._pending_dispatch.add(c)
+            if inst is None:
+                self.cluster.request(c)
+
+    def _begin_training(self, c: str, cold: bool,
+                        duration: Optional[float] = None):
+        """`duration` overrides the sampled epoch time for checkpoint
+        resumes (the task only owes the post-checkpoint remainder)."""
+        dur = duration if duration is not None \
+            else self._sample_duration(c, cold)
+        self._train_start[c] = self.sim.now
+        self._train_duration[c] = dur
+        self.timeline.mark(c, "training")
+        iid = self.cluster.instance_of(c).iid
+        self._task[c] = iid
+        if duration is not None:
+            self._resumed.add(c)
+        self.sim.schedule_in(dur, lambda: self._finish_training(c, iid))
+
+    def _finish_training(self, c: str, iid: int):
+        if self._done:
+            return
+        inst = self.cluster.instance_of(c)
+        if inst is None or inst.iid != iid or self._task.get(c) != iid:
+            return                                  # stale (preempted)
+        if c not in self._active:
+            return                                  # excluded mid-flight
+        t = self.sim.now
+        dur = t - self._train_start[c]
+        cold = self.cluster.is_fresh(inst.iid)
+        spin_obs = None
+        if cold and inst.t_ready is not None:
+            spin_obs = inst.t_ready - inst.t_request
+        self.cluster.mark_warm(inst.iid)
+        del self._task[c]
+        # keep the estimator EMAs fresh — budget screening prices the
+        # next epoch off them, exactly as in the sync engine. Partial
+        # (checkpoint-resumed) epochs would corrupt the epoch EMAs, so
+        # only the spin-up observation survives for those.
+        if c in self._resumed:
+            self._resumed.discard(c)
+        else:
+            self.scheduler.est.observe_epoch(c, dur, cold)
+        if spin_obs is not None:
+            self.scheduler.est.observe_spin_up(c, spin_obs)
+        if self.hooks:
+            self.hooks.run_local(c, self._round_idx)
+        self._buffer.append(c)
+        self.timeline.mark(c, "idle")
+        # exclusions may shrink the pool below buffer_k; clamp so the
+        # run can still make progress (else it would spin forever)
+        k_eff = min(self.buffer_k, max(1, len(self._active)))
+        if len(self._buffer) >= k_eff:
+            self._aggregate()
+        if not self._done and c in self._active:
+            self._dispatch(c)       # straight back to work, no barrier
+
+    # ------------------------------------------------------------------
+    # Buffered aggregation = one async "round".
+    # ------------------------------------------------------------------
+    def _aggregate(self):
+        r = self._round_idx
+        participants = list(self._buffer)
+        self._buffer.clear()
+        if self.hooks:
+            self.hooks.aggregate(participants, r)
+        self.per_round_participants.append(participants)
+        self._record_costs()
+        if r + 1 >= self.run_cfg.n_epochs:
+            self._finish_run()
+            return
+        self._round_idx = r + 1
+        if self.policy.enforce_budgets:
+            self._screen_budgets()
+            if not self._active and not self._buffer:
+                self._finish_run()
+                return
+        for c, p in self.profiles.items():
+            if c not in self._active and c not in self.excluded \
+                    and p.join_round <= self._round_idx:
+                self._join(c)
+
+    def _screen_budgets(self):
+        self._sync_budgets()
+        keep = self.scheduler.screen_participants(
+            list(self._active), self._spot_price_of)
+        for c in [c for c in self._active if c not in keep]:
+            self.excluded.append(c)
+            self._active.remove(c)
+            self._task.pop(c, None)
+            self._pending_dispatch.discard(c)
+            if self.cluster.instance_of(c) is not None:
+                self.timeline.mark(c, "idle")
+                self.cluster.terminate(c)
+
+    # ------------------------------------------------------------------
+    # Bus events.
+    # ------------------------------------------------------------------
+    def _on_client_ready(self, ev: ClientReady):
+        c = ev.client
+        if self._done or c not in self._active:
+            return
+        if ev.resume_token is not None:
+            self._begin_training(c, cold=True,
+                                 duration=ev.resume_token["remaining"])
+        elif c in self._pending_dispatch:
+            self._pending_dispatch.discard(c)
+            self._begin_training(c, cold=True)
+
+    def _on_client_lost(self, ev: ClientLost):
+        c = ev.client
+        if self._done or c not in self._active:
+            return
+        if self._task.pop(c, None) is None:
+            self.timeline.mark(c, "savings")
+            self._pending_dispatch.add(c)       # re-request on next need
+            self.cluster.request(c)
+            return
+        # resume from the last periodic checkpoint (§III-D)
+        remaining = self._checkpoint_remaining(
+            c, self._train_start[c], self._train_duration[c])
+        self.cluster.request(c, resume_token={"remaining": remaining})
+
+    # ------------------------------------------------------------------
+    def _finish_run(self):
+        self._done = True
+        self._makespan = self.sim.now
+        self.cluster.shutdown()
+        for c in self.profiles:
+            if self.cluster.instance_of(c) is not None:
+                self.cluster.terminate(c)       # stragglers cut off here
+                self.timeline.mark(c, "done")
+        self._record_costs()
+        self.timeline.close()

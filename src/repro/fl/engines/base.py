@@ -1,0 +1,145 @@
+"""RoundEngine protocol + the shared engine machinery.
+
+A `RoundEngine` owns the FL-round semantics of a run: when clients are
+dispatched, what constitutes a completed round, and when aggregation
+fires. Engines are driven entirely by client-level bus events
+(`ClientReady`, `ClientLost`) plus the simulator clock — they never talk
+to raw instance callbacks, which is what makes new round disciplines
+(async buffering, straggler cut-offs, hierarchical rounds) addable
+without touching the cloud or cluster layers.
+
+Contract:
+  * `start()` schedules the initial work at t=0; the composition root
+    then drains the simulator.
+  * `result()` is called after the event heap drains and returns the
+    engine's `RunResult`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.cloud.accounting import CostAccountant
+from repro.cloud.simulator import CloudSimulator
+from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
+                                 SchedulerConfig)
+from repro.core.events import ClientLost, ClientReady
+from repro.core.policies import Policy
+from repro.core.scheduler import FedCostAwareScheduler
+from repro.fl.cluster import ClusterManager
+from repro.fl.telemetry import TimelineRecorder
+from repro.fl.types import RunResult, TrainerHooks
+
+
+@dataclasses.dataclass
+class EngineContext:
+    """Everything a round engine needs, wired by the composition root."""
+    run_cfg: FLRunConfig
+    cloud_cfg: CloudConfig
+    sched_cfg: SchedulerConfig
+    policy: Policy
+    sim: CloudSimulator
+    cluster: ClusterManager
+    scheduler: FedCostAwareScheduler
+    accountant: CostAccountant
+    timeline: TimelineRecorder
+    rng: np.random.RandomState
+    hooks: Optional[TrainerHooks] = None
+
+
+class BaseEngine:
+    """Shared state + helpers; subclasses implement the round discipline."""
+
+    name = "base"
+
+    def __init__(self, ctx: EngineContext):
+        self.ctx = ctx
+        self.run_cfg = ctx.run_cfg
+        self.cloud_cfg = ctx.cloud_cfg
+        self.sched_cfg = ctx.sched_cfg
+        self.policy = ctx.policy
+        self.sim = ctx.sim
+        self.cluster = ctx.cluster
+        self.scheduler = ctx.scheduler
+        self.accountant = ctx.accountant
+        self.timeline = ctx.timeline
+        self.hooks = ctx.hooks
+        self._rng = ctx.rng
+        self.profiles: Dict[str, ClientProfile] = {
+            c.name: c for c in ctx.run_cfg.clients}
+        self.cost_curve: List[dict] = []
+        self.per_round_participants: List[List[str]] = []
+        self.excluded: List[str] = []
+        self._round_idx = -1
+        self._done = False
+        self._makespan: Optional[float] = None
+        self.sim.bus.subscribe(ClientReady, self._on_client_ready)
+        self.sim.bus.subscribe(ClientLost, self._on_client_lost)
+
+    # ------------------------------------------------------------------
+    # Round discipline (subclass responsibility).
+    # ------------------------------------------------------------------
+    def start(self):
+        raise NotImplementedError
+
+    def _on_client_ready(self, ev: ClientReady):
+        raise NotImplementedError
+
+    def _on_client_lost(self, ev: ClientLost):
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # Shared helpers.
+    # ------------------------------------------------------------------
+    def _sample_duration(self, c: str, cold: bool) -> float:
+        prof = self.profiles[c]
+        base = prof.mean_epoch_s * (prof.cold_multiplier if cold else 1.0)
+        jit = float(np.exp(self._rng.randn() * prof.jitter))
+        return base * jit
+
+    def _checkpoint_remaining(self, c: str, train_start: float,
+                              train_duration: float) -> float:
+        """§III-D: work since the last periodic checkpoint is lost on
+        preemption; returns the epoch time still owed after a resume."""
+        elapsed = max(self.sim.now - train_start, 0.0)
+        ck = self.sched_cfg.checkpoint_every_s
+        preserved = math.floor(elapsed / ck) * ck
+        return max(train_duration - preserved, 1.0)
+
+    def _sync_budgets(self):
+        for c in self.profiles:
+            self.scheduler.ledger.sync_spend(
+                c, self.accountant.client_cost(c))
+
+    def _spot_price_of(self, c: str) -> float:
+        zone = self.profiles[c].zone
+        if zone is None:
+            _, p = self.sim.prices.cheapest_zone(self.sim.now)
+            return p
+        return self.sim.prices.price(zone, self.sim.now,
+                                     self.policy.on_demand)
+
+    def _record_costs(self):
+        for c in self.profiles:
+            self.cost_curve.append({
+                "t": self.sim.now, "client": c,
+                "cum_cost": self.accountant.client_cost(c),
+                "round": self._round_idx,
+            })
+
+    # ------------------------------------------------------------------
+    def result(self) -> RunResult:
+        return RunResult(
+            total_cost=self.accountant.total_cost(),
+            per_client_cost={c: self.accountant.client_cost(c)
+                             for c in self.profiles},
+            makespan_s=(self._makespan if self._makespan is not None
+                        else self.sim.now),
+            timeline=self.timeline.segments,
+            cost_curve=self.cost_curve,
+            rounds_completed=self._round_idx + 1,
+            excluded_clients=list(self.excluded),
+            per_round_participants=self.per_round_participants)

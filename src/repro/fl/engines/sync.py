@@ -1,0 +1,214 @@
+"""SyncEngine: the paper's synchronous round barrier (Table I).
+
+Behavior-preserving port of the seed `FLCloudRunner` round logic — for a
+fixed seed it schedules the identical event sequence, so `RunResult`
+totals for the on_demand / spot / fedcostaware policies match the
+pre-refactor values (pinned by tests/test_engines.py). One deliberate
+deviation: the seed's preemption recovery ignored a client's pinned
+zone under cheapest-zone policies (recovering in the cheapest zone);
+`ClusterManager.request` now honors the pin on every request, initial
+or recovery.
+
+One FL round dispatches every participant, waits for all results (the
+synchronous barrier), aggregates, then starts the next round. The
+FedCostAware scheduler's Listing-1 lifecycle decisions (terminate idle
+instances whose saving beats the respin threshold, pre-warm at
+F_s - T_spin_up - T_buffer) are consumed here and executed by the
+cluster manager.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+from repro.cloud.simulator import RUNNING, SPINNING_UP
+from repro.core.events import ClientLost, ClientReady
+from repro.fl.engines.base import BaseEngine, EngineContext
+
+
+class SyncEngine(BaseEngine):
+    name = "sync"
+
+    def __init__(self, ctx: EngineContext):
+        super().__init__(ctx)
+        self._pending_task: Dict[str, Optional[int]] = {}  # client->round
+        self._train_start: Dict[str, float] = {}
+        self._train_duration: Dict[str, float] = {}
+        self._resumed: set = set()
+        self._round_pending: set = set()
+        self._participants: List[str] = []
+
+    # ------------------------------------------------------------------
+    def start(self):
+        self.sim.schedule(0.0, lambda: self._start_round(0))
+
+    # ------------------------------------------------------------------
+    # Round lifecycle.
+    # ------------------------------------------------------------------
+    def _start_round(self, r: int):
+        if r >= self.run_cfg.n_epochs:
+            self._finish_run()
+            return
+        self._round_idx = r
+        self.scheduler.begin_round(r)
+        # elastic scaling: clients may join at a later round (§V future
+        # work); budget exhaustion below is the symmetric leave path.
+        clients = [c for c, p in self.profiles.items()
+                   if p.join_round <= r]
+        if self.policy.enforce_budgets and r >= 1:
+            before = set(c for c in clients
+                         if not self.scheduler.ledger.is_excluded(c))
+            self._sync_budgets()
+            clients = self.scheduler.screen_participants(
+                [c for c in clients], self._spot_price_of)
+            newly_excluded = before - set(clients)
+            for c in newly_excluded:
+                self.excluded.append(c)
+                if self.cluster.instance_of(c) is not None:
+                    self.timeline.mark(c, "idle")
+                    self.cluster.terminate(c)
+        if not clients:
+            self._finish_run()
+            return
+        self._participants = clients
+        self.per_round_participants.append(list(clients))
+        self._round_pending = set(clients)
+        for c in clients:
+            self._dispatch(c, r)
+
+    def _dispatch(self, c: str, r: int):
+        inst = self.cluster.instance_of(c)
+        t = self.sim.now
+        if inst is not None and inst.state == RUNNING:
+            cold = self.cluster.is_fresh(inst.iid)
+            self.scheduler.register_dispatch(c, t, cold, False)
+            self._begin_training(c, cold)
+        elif inst is not None and inst.state == SPINNING_UP:
+            # pre-warmed instance still booting: task queued until ready
+            self._pending_task[c] = r
+            self.scheduler.register_dispatch(c, t, True, True)
+        else:
+            self._pending_task[c] = r
+            self.scheduler.register_dispatch(c, t, True, True)
+            self.cluster.request(c)
+
+    def _on_client_ready(self, ev: ClientReady):
+        c = ev.client
+        if ev.resume_token is not None:
+            self._resume(c, ev)
+        elif self._pending_task.get(c) is not None:
+            self._pending_task[c] = None
+            self._begin_training(c, cold=True)
+        else:
+            self.timeline.mark(c, "idle")  # pre-warmed, waits for next round
+
+    # ------------------------------------------------------------------
+    # Local training execution (simulated duration; real JAX via hooks).
+    # ------------------------------------------------------------------
+    def _begin_training(self, c: str, cold: bool):
+        r = self._round_idx
+        dur = self._sample_duration(c, cold)
+        self._train_start[c] = self.sim.now
+        self._train_duration[c] = dur
+        self.timeline.mark(c, "training")
+        iid = self.cluster.instance_of(c).iid
+        self.sim.schedule_in(dur, lambda: self._finish_training(c, r, iid))
+
+    def _finish_training(self, c: str, r: int, iid: int):
+        inst = self.cluster.instance_of(c)
+        if inst is None or inst.iid != iid or r != self._round_idx:
+            return                                  # stale (preempted)
+        if c not in self._round_pending:
+            return
+        t = self.sim.now
+        dur = t - self._train_start[c]
+        cold = self.cluster.is_fresh(inst.iid)
+        spin_obs = None
+        if cold and inst.t_ready is not None:
+            spin_obs = inst.t_ready - inst.t_request
+        self.cluster.mark_warm(inst.iid)
+        if c in self._resumed:
+            # Partial (resumed) epochs would corrupt the epoch-time EMAs;
+            # only the spin-up observation is still valid.
+            self._resumed.discard(c)
+            s = self.scheduler.states[c]
+            s.finished = True
+            s.finish_time = t
+            if spin_obs is not None:
+                self.scheduler.est.observe_spin_up(c, spin_obs)
+        else:
+            self.scheduler.on_result(c, t, dur, cold, spin_obs)
+        if self.hooks:
+            self.hooks.run_local(c, r)
+        self._round_pending.discard(c)
+        self.timeline.mark(c, "idle")
+
+        if self.policy.manage_lifecycle and self._round_pending:
+            more = (r + 1) < self.run_cfg.n_epochs
+            prewarm_t = self.scheduler.evaluate_termination(c, t, more)
+            if prewarm_t is not None:
+                self.cluster.terminate(c)
+                self.timeline.mark(c, "savings")
+                if math.isfinite(prewarm_t):
+                    self.cluster.schedule_prewarm(c, prewarm_t)
+
+        if not self._round_pending:
+            self._end_round(r)
+
+    # ------------------------------------------------------------------
+    # Preemption (§III-D).
+    # ------------------------------------------------------------------
+    def _on_client_lost(self, ev: ClientLost):
+        c = ev.client
+        was_training = c in self._round_pending and c in self._train_start
+        if not was_training:
+            # idle / pre-warmed instance lost: next dispatch re-requests
+            self.timeline.mark(c, "savings")
+            return
+        # Progress up to the last periodic checkpoint survives (§III-D):
+        # the client reloads from cloud storage and resumes mid-epoch.
+        remaining = self._checkpoint_remaining(
+            c, self._train_start[c], self._train_duration[c])
+        r = self._round_idx
+        self.cluster.request(
+            c, resume_token={"round": r, "remaining": remaining})
+        # §III-D dynamic schedule adjustment: push back pre-warm targets of
+        # already-terminated clients so they stay off while this client
+        # recovers; each moved spin-up event is rescheduled.
+        spin_est = self.scheduler.est.model(c).spin_up.get(
+            self.cloud_cfg.spin_up_mean_s)
+        recovery_finish = self.sim.now + spin_est + remaining
+        moved = self.scheduler.on_preemption_recovery(c, recovery_finish)
+        for other, new_t in moved.items():
+            self.cluster.schedule_prewarm(other, new_t)
+
+    def _resume(self, c: str, ev: ClientReady):
+        tok = ev.resume_token
+        if tok["round"] != self._round_idx:
+            return
+        remaining = tok["remaining"]
+        self._resumed.add(c)
+        self._train_start[c] = self.sim.now
+        self._train_duration[c] = remaining
+        self.timeline.mark(c, "training")
+        r = self._round_idx
+        iid = ev.instance.iid
+        self.sim.schedule_in(
+            remaining, lambda: self._finish_training(c, r, iid))
+
+    # ------------------------------------------------------------------
+    def _end_round(self, r: int):
+        if self.hooks:
+            self.hooks.aggregate(list(self._participants), r)
+        self._record_costs()
+        self.sim.schedule_in(1.0, lambda: self._start_round(r + 1))
+
+    def _finish_run(self):
+        self._done = True
+        self.cluster.shutdown()
+        for c in self.profiles:
+            if self.cluster.instance_of(c) is not None:
+                self.cluster.terminate(c)
+                self.timeline.mark(c, "done")
+        self._record_costs()
+        self.timeline.close()

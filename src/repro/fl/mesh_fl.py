@@ -27,6 +27,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common import compat
 from repro.models import lm
 from repro.sharding.rules import ShardingCtx
 
@@ -100,7 +101,7 @@ def fedavg_sync_compressed(params_stacked, global_params, weights,
 
     def one_leaf(p_stk, g, spec_stk):
         delta = p_stk.astype(jnp.float32) - g.astype(jnp.float32)[None]
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             ring_avg, mesh=mesh,
             in_specs=(spec_stk, P("pod")),
             out_specs=spec_stk,

@@ -1,61 +1,47 @@
-"""FL-on-cloud runner: drives synchronous FL rounds through the cloud
-simulator under a scheduling policy (on_demand / spot / fedcostaware).
+"""FL-on-cloud runner: the thin composition root.
 
-This reproduces the paper's experiment harness: client epoch durations
-come from heterogeneity profiles (`ClientProfile`), instances accrue real
-(simulated) dollar costs, and the FedCostAware scheduler terminates /
-pre-warms instances per Listing 1. Optionally a `TrainerHooks` object
-attaches *real JAX training* so the run produces an actual global model
-(used by the end-to-end examples); simulation time is decoupled from
-wall-clock, mirroring the paper's scaled-duration simulation setup for
-MNIST/CIFAR.
+Wires the layered stack together and drains the simulator:
 
-Outputs: per-client costs, a Fig-4 style state timeline, a Fig-5 style
-cumulative cost curve, and the trained model (when hooks attached).
+  EventBus          typed pub/sub connecting every layer (core.events)
+  CloudSimulator    discrete-event cloud; publishes instance lifecycle +
+                    billing events (cloud.simulator)
+  CostAccountant    incremental per-client dollar accounting off the
+                    billing events (cloud.accounting)
+  ClusterManager    instance lifecycle: request / terminate / pre-warm /
+                    resume-from-checkpoint (fl.cluster)
+  RoundEngine       FL-round semantics — SyncEngine reproduces the
+                    paper's synchronous barrier (Table I); the
+                    AsyncBufferedEngine adds FedBuff-style buffered
+                    asynchronous rounds (fl.engines)
+  FedCostAwareScheduler  the paper's Listing-1 decisions (core.scheduler)
+
+The policy (`on_demand` / `spot` / `fedcostaware` / `fedcostaware_async`)
+selects the market, the lifecycle management, and the engine. Optionally
+a `TrainerHooks` object attaches *real JAX training* so the run produces
+an actual global model; simulated time stays decoupled from wall-clock,
+mirroring the paper's scaled-duration simulation setup for MNIST/CIFAR.
+
+Outputs (`RunResult`): per-client costs, a Fig-4 style state timeline, a
+Fig-5 style cumulative cost curve, and the trained model (when hooks
+attached).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Callable, Dict, List, Optional
+from typing import Optional
 
 import numpy as np
 
-from repro.common.config import (CloudConfig, FLRunConfig, SchedulerConfig,
-                                 ClientProfile)
-from repro.cloud.simulator import (CloudSimulator, Instance, RUNNING,
-                                   SPINNING_UP)
+from repro.cloud.accounting import CostAccountant
+from repro.cloud.simulator import CloudSimulator
+from repro.common.config import CloudConfig, FLRunConfig, SchedulerConfig
+from repro.core.events import EventBus
 from repro.core.policies import Policy, get_policy, make_scheduler
+from repro.fl.cluster import ClusterManager
+from repro.fl.engines import EngineContext, get_engine
+from repro.fl.telemetry import Segment, TimelineRecorder
+from repro.fl.types import RunResult, TrainerHooks
 
-
-@dataclasses.dataclass
-class Segment:
-    client: str
-    state: str          # spinup | training | idle | savings
-    t0: float
-    t1: float
-
-
-class TrainerHooks:
-    """Optional attachment for real model training."""
-
-    def run_local(self, client: str, round_idx: int) -> None:  # pragma: no cover
-        pass
-
-    def aggregate(self, participants: List[str], round_idx: int) -> None:  # pragma: no cover
-        pass
-
-
-@dataclasses.dataclass
-class RunResult:
-    total_cost: float
-    per_client_cost: Dict[str, float]
-    makespan_s: float
-    timeline: List[Segment]
-    cost_curve: List[dict]            # {t, client, cum_cost} at round ends
-    rounds_completed: int
-    excluded_clients: List[str]
-    per_round_participants: List[List[str]]
+__all__ = ["FLCloudRunner", "RunResult", "Segment", "TrainerHooks"]
 
 
 class FLCloudRunner:
@@ -69,301 +55,32 @@ class FLCloudRunner:
         self.sched_cfg = sched_cfg or SchedulerConfig()
         self.policy: Policy = get_policy(run_cfg.policy)
         seed = run_cfg.seed if seed is None else seed
-        self.sim = CloudSimulator(self.cloud_cfg, seed=seed)
+
+        # layer wiring — construction order fixes bus subscription order:
+        # accounting sees cloud events before the cluster re-publishes
+        # them as client events, and engines only ever see client events.
+        self.bus = EventBus()
+        self.sim = CloudSimulator(self.cloud_cfg, seed=seed, bus=self.bus)
+        self.accountant = CostAccountant(self.bus, self.sim.prices,
+                                         clock=lambda: self.sim.now)
         self.scheduler = make_scheduler(
             self.policy, self.sched_cfg, self.cloud_cfg.spin_up_mean_s)
-        self.hooks = hooks
-        self._rng = np.random.RandomState(seed + 101)
-
-        self.profiles: Dict[str, ClientProfile] = {
-            c.name: c for c in run_cfg.clients}
+        self.profiles = {c.name: c for c in run_cfg.clients}
         for c in run_cfg.clients:
             self.scheduler.ledger.register(c.name, c.budget)
-
-        self.instances: Dict[str, Optional[Instance]] = {
-            c.name: None for c in run_cfg.clients}
-        self._fresh: Dict[int, bool] = {}       # iid -> no epoch done yet
-        self._pending_task: Dict[str, Optional[int]] = {}  # client->round
-        self._train_start: Dict[str, float] = {}
-        self._train_duration: Dict[str, float] = {}
-        self._resumed: set = set()
-        self._prewarm_gen: Dict[str, int] = {}
-        self.timeline: List[Segment] = []
-        self.cost_curve: List[dict] = []
-        self._round_pending: set = set()
-        self._round_idx = -1
-        self._participants: List[str] = []
-        self.per_round_participants: List[List[str]] = []
-        self.excluded: List[str] = []
-        self._done = False
+        self.timeline = TimelineRecorder(lambda: self.sim.now)
+        self.cluster = ClusterManager(self.sim, self.policy, self.profiles,
+                                      self.scheduler, self.timeline)
+        self.hooks = hooks
+        self.engine = get_engine(self.policy.engine)(EngineContext(
+            run_cfg=run_cfg, cloud_cfg=self.cloud_cfg,
+            sched_cfg=self.sched_cfg, policy=self.policy, sim=self.sim,
+            cluster=self.cluster, scheduler=self.scheduler,
+            accountant=self.accountant, timeline=self.timeline,
+            rng=np.random.RandomState(seed + 101), hooks=hooks))
 
     # ------------------------------------------------------------------
     def run(self) -> RunResult:
-        self.sim.schedule(0.0, lambda: self._start_round(0))
+        self.engine.start()
         self.sim.run_until_idle()
-        total = self.sim.total_cost()
-        per_client = {c: self.sim.client_cost(c) for c in self.profiles}
-        return RunResult(
-            total_cost=total, per_client_cost=per_client,
-            makespan_s=self.sim.now, timeline=self.timeline,
-            cost_curve=self.cost_curve,
-            rounds_completed=self._round_idx + 1,
-            excluded_clients=list(self.excluded),
-            per_round_participants=self.per_round_participants)
-
-    # ------------------------------------------------------------------
-    # Round lifecycle.
-    # ------------------------------------------------------------------
-    def _start_round(self, r: int):
-        if r >= self.run_cfg.n_epochs:
-            self._finish_run()
-            return
-        self._round_idx = r
-        self.scheduler.begin_round(r)
-        # elastic scaling: clients may join at a later round (§V future
-        # work); budget exhaustion below is the symmetric leave path.
-        clients = [c for c, p in self.profiles.items()
-                   if p.join_round <= r]
-        if self.policy.enforce_budgets and r >= 1:
-            before = set(c for c in clients
-                         if not self.scheduler.ledger.is_excluded(c))
-            self._sync_budgets()
-            clients = self.scheduler.screen_participants(
-                [c for c in clients], self._spot_price_of)
-            newly_excluded = before - set(clients)
-            for c in newly_excluded:
-                self.excluded.append(c)
-                inst = self.instances.get(c)
-                if inst is not None:
-                    self._mark(c, "idle")
-                    self.sim.terminate(inst)
-                    self.instances[c] = None
-        if not clients:
-            self._finish_run()
-            return
-        self._participants = clients
-        self.per_round_participants.append(list(clients))
-        self._round_pending = set(clients)
-        for c in clients:
-            self._dispatch(c, r)
-
-    def _dispatch(self, c: str, r: int):
-        inst = self.instances.get(c)
-        t = self.sim.now
-        if inst is not None and inst.state == RUNNING:
-            cold = self._fresh.get(inst.iid, True)
-            self.scheduler.register_dispatch(c, t, cold, False)
-            self._begin_training(c, cold)
-        elif inst is not None and inst.state == SPINNING_UP:
-            # pre-warmed instance still booting: task queued until ready
-            self._pending_task[c] = r
-            self.scheduler.register_dispatch(c, t, True, True)
-        else:
-            self._pending_task[c] = r
-            self.scheduler.register_dispatch(c, t, True, True)
-            self._request_instance(c)
-
-    def _request_instance(self, c: str):
-        prof = self.profiles[c]
-        zone = prof.zone
-        if zone is None and self.policy.pick_cheapest_zone:
-            zone, _ = self.sim.prices.cheapest_zone(self.sim.now)
-        inst = self.sim.request_instance(
-            c, zone=zone, on_demand=self.policy.on_demand,
-            on_ready=self._on_ready, on_preempt=self._on_preempt)
-        self.instances[c] = inst
-        self._fresh[inst.iid] = True
-        self._mark(c, "spinup")
-        return inst
-
-    def _on_ready(self, inst: Instance):
-        c = inst.client
-        if self._pending_task.get(c) is not None:
-            self._pending_task[c] = None
-            self._begin_training(c, cold=True)
-        else:
-            self._mark(c, "idle")   # pre-warmed and waiting for next round
-
-    # ------------------------------------------------------------------
-    # Local training execution (simulated duration + optional real JAX).
-    # ------------------------------------------------------------------
-    def _sample_duration(self, c: str, cold: bool) -> float:
-        prof = self.profiles[c]
-        base = prof.mean_epoch_s * (prof.cold_multiplier if cold else 1.0)
-        jit = float(np.exp(self._rng.randn() * prof.jitter))
-        return base * jit
-
-    def _begin_training(self, c: str, cold: bool):
-        r = self._round_idx
-        dur = self._sample_duration(c, cold)
-        self._train_start[c] = self.sim.now
-        self._train_duration[c] = dur
-        self._mark(c, "training")
-        inst = self.instances[c]
-        iid = inst.iid
-        self.sim.schedule_in(dur, lambda: self._finish_training(c, r, iid))
-
-    def _finish_training(self, c: str, r: int, iid: int):
-        inst = self.instances.get(c)
-        if inst is None or inst.iid != iid or r != self._round_idx:
-            return                                  # stale (preempted)
-        if c not in self._round_pending:
-            return
-        t = self.sim.now
-        dur = t - self._train_start[c]
-        cold = self._fresh.get(inst.iid, True)
-        spin_obs = None
-        if cold and inst.t_ready is not None:
-            spin_obs = inst.t_ready - inst.t_request
-        self._fresh[inst.iid] = False
-        if c in self._resumed:
-            # Partial (resumed) epochs would corrupt the epoch-time EMAs;
-            # only the spin-up observation is still valid.
-            self._resumed.discard(c)
-            s = self.scheduler.states[c]
-            s.finished = True
-            s.finish_time = t
-            if spin_obs is not None:
-                self.scheduler.est.observe_spin_up(c, spin_obs)
-        else:
-            self.scheduler.on_result(c, t, dur, cold, spin_obs)
-        if self.hooks:
-            self.hooks.run_local(c, r)
-        self._round_pending.discard(c)
-        self._mark(c, "idle")
-
-        if self.policy.manage_lifecycle and self._round_pending:
-            more = (r + 1) < self.run_cfg.n_epochs
-            prewarm_t = self.scheduler.evaluate_termination(c, t, more)
-            if prewarm_t is not None:
-                self.sim.terminate(inst)
-                self.instances[c] = None
-                self._mark(c, "savings")
-                if math.isfinite(prewarm_t):
-                    self._schedule_prewarm(c, prewarm_t)
-
-        if not self._round_pending:
-            self._end_round(r)
-
-    def _schedule_prewarm(self, c: str, t: float):
-        gen = self._prewarm_gen.get(c, 0) + 1
-        self._prewarm_gen[c] = gen
-
-        def fire():
-            if self._prewarm_gen.get(c) != gen or self._done:
-                return
-            # stale if queue entry moved later (§III-D adjustment)
-            q_t = self.scheduler.prewarm_queue.get(c)
-            if q_t is not None and q_t > self.sim.now + 1e-6:
-                self._schedule_prewarm(c, q_t)
-                return
-            if self.instances.get(c) is None:
-                self._request_instance(c)
-
-        self.sim.schedule(max(t, self.sim.now), fire)
-
-    # ------------------------------------------------------------------
-    # Preemption (§III-D).
-    # ------------------------------------------------------------------
-    def _on_preempt(self, inst: Instance):
-        c = inst.client
-        if self.instances.get(c) is None or self.instances[c].iid != inst.iid:
-            return
-        self.instances[c] = None
-        was_training = c in self._round_pending and c in self._train_start
-        if not was_training:
-            # idle / pre-warmed instance lost: next dispatch will re-request
-            self._mark(c, "savings")
-            return
-        # Progress up to the last periodic checkpoint survives (§III-D):
-        # the client reloads from cloud storage and resumes mid-epoch.
-        start = self._train_start[c]
-        elapsed = max(self.sim.now - start, 0.0)
-        ck = self.sched_cfg.checkpoint_every_s
-        preserved = math.floor(elapsed / ck) * ck
-        remaining = max(self._train_duration[c] - preserved, 1.0)
-        r = self._round_idx
-
-        def resume(i: Instance):
-            if self.instances.get(c) is not i or r != self._round_idx:
-                return
-            self._resumed.add(c)
-            self._train_start[c] = self.sim.now
-            self._train_duration[c] = remaining
-            self._mark(c, "training")
-            self.sim.schedule_in(
-                remaining, lambda: self._finish_training(c, r, i.iid))
-
-        zone = None
-        if not self.policy.pick_cheapest_zone:
-            zone = self.profiles[c].zone
-        inst2 = self.sim.request_instance(
-            c, zone=zone, on_demand=self.policy.on_demand,
-            on_ready=resume, on_preempt=self._on_preempt)
-        self.instances[c] = inst2
-        self._fresh[inst2.iid] = True
-        self._mark(c, "spinup")
-        # §III-D dynamic schedule adjustment: push back pre-warm targets of
-        # already-terminated clients so they stay off while this client
-        # recovers; runner reschedules each moved spin-up event.
-        spin_est = self.scheduler.est.model(c).spin_up.get(
-            self.cloud_cfg.spin_up_mean_s)
-        recovery_finish = self.sim.now + spin_est + remaining
-        moved = self.scheduler.on_preemption_recovery(c, recovery_finish)
-        for other, new_t in moved.items():
-            self._schedule_prewarm(other, new_t)
-
-    # ------------------------------------------------------------------
-    def _end_round(self, r: int):
-        if self.hooks:
-            self.hooks.aggregate(list(self._participants), r)
-        self._record_costs()
-        self.sim.schedule_in(1.0, lambda: self._start_round(r + 1))
-
-    def _finish_run(self):
-        self._done = True
-        for c, inst in self.instances.items():
-            if inst is not None:
-                self.sim.terminate(inst)
-                self.instances[c] = None
-                self._mark(c, "done")
-        self._record_costs()
-        self.close_timeline()
-
-    # ------------------------------------------------------------------
-    # Accounting / reporting.
-    # ------------------------------------------------------------------
-    def _sync_budgets(self):
-        for c in self.profiles:
-            self.scheduler.ledger.sync_spend(c, self.sim.client_cost(c))
-
-    def _spot_price_of(self, c: str) -> float:
-        zone = self.profiles[c].zone
-        if zone is None:
-            _, p = self.sim.prices.cheapest_zone(self.sim.now)
-            return p
-        return self.sim.prices.price(zone, self.sim.now,
-                                     self.policy.on_demand)
-
-    def _record_costs(self):
-        for c in self.profiles:
-            self.cost_curve.append({
-                "t": self.sim.now, "client": c,
-                "cum_cost": self.sim.client_cost(c),
-                "round": self._round_idx,
-            })
-
-    def _mark(self, c: str, state: str):
-        """Close the client's previous timeline segment, open `state`."""
-        t = self.sim.now
-        for seg in reversed(self.timeline):
-            if seg.client == c and seg.t1 < 0:
-                seg.t1 = t
-                break
-        if state != "done":
-            self.timeline.append(Segment(c, state, t, -1.0))
-
-    def close_timeline(self):
-        for seg in self.timeline:
-            if seg.t1 < 0:
-                seg.t1 = self.sim.now
+        return self.engine.result()

@@ -1,0 +1,44 @@
+"""Run telemetry: the Fig-4 style client-state timeline.
+
+Split out of the old monolithic runner so every `RoundEngine` (sync,
+async, future engines) records state transitions through one small,
+engine-agnostic recorder.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+
+@dataclasses.dataclass
+class Segment:
+    client: str
+    state: str          # spinup | training | idle | savings
+    t0: float
+    t1: float
+
+
+class TimelineRecorder:
+    """Per-client open/close segment bookkeeping against simulated time."""
+
+    def __init__(self, clock: Callable[[], float]):
+        self._clock = clock
+        self.segments: List[Segment] = []
+
+    def mark(self, client: str, state: str):
+        """Close the client's previous timeline segment, open `state`.
+        `state == "done"` closes without opening a new segment."""
+        t = self._clock()
+        for seg in reversed(self.segments):
+            if seg.client == client and seg.t1 < 0:
+                seg.t1 = t
+                break
+        if state != "done":
+            self.segments.append(Segment(client, state, t, -1.0))
+
+    def close(self):
+        """End of run: close every still-open segment at the current time."""
+        t = self._clock()
+        for seg in self.segments:
+            if seg.t1 < 0:
+                seg.t1 = t

@@ -1,0 +1,33 @@
+"""Shared FL-runner types: the trainer attachment interface and the run
+result record. Engine-agnostic — both the sync barrier engine and the
+async buffered engine produce the same `RunResult` shape, which is what
+lets `benchmarks/table1.py` treat `fedcostaware_async` as just another
+column."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.fl.telemetry import Segment
+
+
+class TrainerHooks:
+    """Optional attachment for real model training."""
+
+    def run_local(self, client: str, round_idx: int) -> None:  # pragma: no cover
+        pass
+
+    def aggregate(self, participants: List[str], round_idx: int) -> None:  # pragma: no cover
+        pass
+
+
+@dataclasses.dataclass
+class RunResult:
+    total_cost: float
+    per_client_cost: Dict[str, float]
+    makespan_s: float
+    timeline: List[Segment]
+    cost_curve: List[dict]            # {t, client, cum_cost} at round ends
+    rounds_completed: int
+    excluded_clients: List[str]
+    per_round_participants: List[List[str]]

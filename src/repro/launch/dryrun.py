@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.common import compat
 from repro.common.config import SHAPES
 from repro.configs.shapes import input_specs
 from repro.launch import mesh as M
@@ -45,7 +46,7 @@ def lower_cell(arch: str, shape_name: str, mesh, rule_overrides=None):
     jitted, _ = ST.jit_step_for(cfg, shape, mesh,
                                 rule_overrides=rule_overrides)
     specs = input_specs(cfg, shape)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             lowered = jitted.lower(lm.abstract_params(cfg),
                                    abstract_opt_state(cfg), specs["batch"])
@@ -151,7 +152,7 @@ def run_fl_round(mesh, mesh_name: str, arch: str = "phi3-mini-3.8b",
     jitted = jax.jit(step, in_shardings=(pshard, mushard, bshard, wshard),
                      out_shardings=(pshard, mushard, wshard))
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jitted.lower(params_stk, mu_stk, batches, weights)
         compiled = lowered.compile()
     t1 = time.time()
@@ -214,7 +215,7 @@ def run_fl_agg(mesh, mesh_name: str, arch: str = "phi3-mini-3.8b",
                          out_shardings=pshard)
         args_ = (params_stk, weights)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jitted.lower(*args_)
         compiled = lowered.compile()
     t1 = time.time()

@@ -9,6 +9,7 @@ import pytest
 from repro.common.config import CloudConfig, ClientProfile, FLRunConfig
 from repro.cloud.pricing import PriceBook
 from repro.cloud.simulator import CloudSimulator
+from repro.core.events import InstancePreempted, InstanceReady
 from repro.fl.runner import FLCloudRunner
 
 
@@ -63,7 +64,8 @@ class TestSimulator:
     def test_terminate_while_spinning_never_runs(self):
         sim = CloudSimulator(CLOUD, seed=0)
         ran = []
-        inst = sim.request_instance("c", on_ready=lambda i: ran.append(i))
+        sim.bus.subscribe(InstanceReady, lambda ev: ran.append(ev.instance))
+        inst = sim.request_instance("c")
         sim.terminate(inst)
         sim.run_until_idle()
         assert ran == [] and inst.cost == 0.0
@@ -72,9 +74,83 @@ class TestSimulator:
         cfg = CloudConfig(preemption_rate_per_hr=50.0, spot_rate_sigma=0.0)
         sim = CloudSimulator(cfg, seed=1)
         preempted = []
-        sim.request_instance("c", on_preempt=lambda i: preempted.append(i))
+        sim.bus.subscribe(InstancePreempted,
+                          lambda ev: preempted.append(ev.instance))
+        sim.request_instance("c")
         sim.run_until_idle(t_max=10 * 3600)
         assert len(preempted) == 1
+
+    def test_no_callback_params_on_request(self):
+        """The bus is the only notification channel (PR acceptance)."""
+        import inspect
+        params = inspect.signature(
+            CloudSimulator.request_instance).parameters
+        assert "on_ready" not in params and "on_preempt" not in params
+
+
+class TestBillingEdgeCases:
+    """min-billing floor, zero-cost spin-up termination, and preemption
+    races — the cases the incremental accountant must price identically
+    to the simulator's own ledger."""
+
+    def _ready(self, sim):
+        ready = []
+        sim.bus.subscribe(InstanceReady, lambda ev: ready.append(ev))
+        return ready
+
+    def test_min_billing_floor_on_short_lived_spot(self):
+        sim = CloudSimulator(CLOUD, seed=0)
+        inst = sim.request_instance("c")
+        sim.run_until_idle()
+        sim.now = inst.t_ready + 2.0          # used 2s; floor is 60s
+        sim.terminate(inst)
+        floor = sim.prices.cost(inst.zone, inst.t_ready,
+                                inst.t_ready + CLOUD.min_billing_s,
+                                on_demand=False)
+        assert inst.cost == pytest.approx(floor, rel=1e-9)
+
+    def test_min_billing_floor_not_applied_to_on_demand(self):
+        sim = CloudSimulator(CLOUD, seed=0)
+        inst = sim.request_instance("c", on_demand=True)
+        sim.run_until_idle()
+        sim.now = inst.t_ready + 2.0
+        sim.terminate(inst)
+        assert inst.cost == pytest.approx(2.0 / 3600.0 * 1.008, rel=1e-9)
+
+    def test_terminate_while_spinning_accrues_zero(self):
+        sim = CloudSimulator(CLOUD, seed=0)
+        inst = sim.request_instance("c")
+        assert inst.state == "spinning_up"
+        sim.terminate(inst)
+        sim.run_until_idle()
+        assert inst.cost == 0.0
+        assert sim.client_cost("c") == 0.0
+        # even the min-billing floor must not fire: billing never opened
+        assert inst._billing_from is None and inst.t_ready is None
+
+    def test_preemption_during_spinning_up_is_noop(self):
+        sim = CloudSimulator(CLOUD, seed=0)
+        inst = sim.request_instance("c")
+        assert inst.state == "spinning_up"
+        preempted = []
+        sim.bus.subscribe(InstancePreempted,
+                          lambda ev: preempted.append(ev))
+        assert sim.preempt(inst) is False     # reclaim races the boot
+        assert inst.state == "spinning_up" and inst.cost == 0.0
+        assert preempted == []
+        ready = self._ready(sim)
+        sim.run_until_idle()                  # boot completes normally
+        assert inst.state == "running" and len(ready) == 1
+
+    def test_double_preempt_is_noop(self):
+        cfg = CloudConfig(preemption_rate_per_hr=50.0, spot_rate_sigma=0.0)
+        sim = CloudSimulator(cfg, seed=1)
+        inst = sim.request_instance("c")
+        sim.run_until_idle(t_max=10 * 3600)
+        assert inst.state == "preempted"
+        cost = inst.cost
+        assert sim.preempt(inst) is False
+        assert inst.cost == cost
 
 
 def run_policy(policy, clients=None, n_epochs=8, cloud=None, seed=0):

@@ -1,0 +1,270 @@
+"""Tests for the event-bus orchestration layers introduced by the
+runner split: EventBus, CostAccountant, the engine registry, the
+behavior-preserving SyncEngine (golden pre-refactor totals), and the
+FedBuff-style AsyncBufferedEngine."""
+import math
+
+import pytest
+
+from repro.cloud.accounting import CostAccountant
+from repro.cloud.simulator import CloudSimulator
+from repro.common.config import CloudConfig, ClientProfile, FLRunConfig
+from repro.core.events import (BillingTick, ClientReady, EventBus,
+                               InstancePreempted, InstanceReady)
+from repro.core.policies import POLICIES, get_policy
+from repro.fl.engines import (ENGINES, AsyncBufferedEngine, SyncEngine,
+                              get_engine)
+from repro.fl.runner import FLCloudRunner
+
+CLOUD = CloudConfig(spot_rate_sigma=0.0)
+
+CLIENTS = (
+    ClientProfile("slow", mean_epoch_s=900, jitter=0.0, n_samples=3),
+    ClientProfile("mid", mean_epoch_s=450, jitter=0.0, n_samples=2),
+    ClientProfile("fast", mean_epoch_s=150, jitter=0.0, n_samples=1),
+)
+
+
+def run_policy(policy, clients=CLIENTS, n_epochs=8, cloud=None, seed=0,
+               **cfg_kw):
+    cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=n_epochs,
+                      policy=policy, seed=seed, **cfg_kw)
+    return FLCloudRunner(cfg, cloud_cfg=cloud or CLOUD).run()
+
+
+# ---------------------------------------------------------------------------
+# EventBus.
+# ---------------------------------------------------------------------------
+class TestEventBus:
+    def test_publish_dispatches_by_exact_type(self):
+        bus = EventBus()
+        got = []
+        bus.subscribe(InstanceReady, lambda ev: got.append(("ready", ev)))
+        bus.subscribe(InstancePreempted,
+                      lambda ev: got.append(("preempt", ev)))
+        bus.publish(InstanceReady(1.0, "i"))
+        assert [k for k, _ in got] == ["ready"]
+        bus.publish(InstancePreempted(2.0, "i"))
+        assert [k for k, _ in got] == ["ready", "preempt"]
+
+    def test_subscribers_run_in_subscription_order(self):
+        bus = EventBus()
+        order = []
+        bus.subscribe(InstanceReady, lambda ev: order.append("a"))
+        bus.subscribe(InstanceReady, lambda ev: order.append("b"))
+        bus.publish(InstanceReady(0.0, None))
+        assert order == ["a", "b"]
+
+    def test_unsubscribe(self):
+        bus = EventBus()
+        hits = []
+        h = bus.subscribe(InstanceReady, lambda ev: hits.append(ev))
+        bus.unsubscribe(InstanceReady, h)
+        bus.publish(InstanceReady(0.0, None))
+        assert hits == []
+
+    def test_no_subscribers_is_fine(self):
+        EventBus().publish(BillingTick(0.0, None, "c", 0.0, 1.0, 0.1))
+
+
+# ---------------------------------------------------------------------------
+# CostAccountant: incremental totals == the simulator's O(n) scans.
+# ---------------------------------------------------------------------------
+def make_sim_acct(cfg=CLOUD, seed=0):
+    sim = CloudSimulator(cfg, seed=seed)
+    acct = CostAccountant(sim.bus, sim.prices, clock=lambda: sim.now)
+    return sim, acct
+
+
+class TestCostAccountant:
+    def test_matches_scan_with_open_segment(self):
+        sim, acct = make_sim_acct()
+        a = sim.request_instance("a")
+        b = sim.request_instance("b")
+        sim.run_until_idle()
+        sim.now = max(a.t_ready, b.t_ready) + 1800.0
+        assert acct.client_cost("a") == pytest.approx(
+            sim.client_cost("a"), abs=1e-12)
+        assert acct.total_cost() == pytest.approx(
+            sim.total_cost(), abs=1e-12)
+
+    def test_matches_scan_after_close_and_min_billing(self):
+        sim, acct = make_sim_acct()
+        a = sim.request_instance("a")
+        sim.run_until_idle()
+        sim.now = a.t_ready + 5.0           # under the 60s floor
+        sim.terminate(a)
+        assert acct.client_cost("a") == pytest.approx(
+            sim.client_cost("a"), abs=1e-12)
+        assert acct.client_cost("a") > 0
+
+    def test_terminate_while_spinning_is_free(self):
+        sim, acct = make_sim_acct()
+        a = sim.request_instance("a")
+        sim.terminate(a)
+        sim.run_until_idle()
+        assert acct.client_cost("a") == 0.0 and acct.total_cost() == 0.0
+
+    def test_preempted_instance_closed_out(self):
+        cfg = CloudConfig(preemption_rate_per_hr=50.0, spot_rate_sigma=0.0)
+        sim, acct = make_sim_acct(cfg, seed=1)
+        a = sim.request_instance("a")
+        sim.run_until_idle(t_max=10 * 3600)
+        assert a.state == "preempted"
+        assert acct.client_cost("a") == pytest.approx(a.cost, abs=1e-12)
+        # closed segment: advancing time must not accrue anything more
+        sim.now += 3600.0
+        assert acct.client_cost("a") == pytest.approx(a.cost, abs=1e-12)
+
+    def test_full_run_agrees_with_scan(self):
+        for policy in ("on_demand", "spot", "fedcostaware",
+                       "fedcostaware_async"):
+            r = FLCloudRunner(FLRunConfig(
+                dataset="t", clients=CLIENTS, n_epochs=4, policy=policy,
+                seed=0), cloud_cfg=CLOUD)
+            res = r.run()
+            assert res.total_cost == pytest.approx(
+                r.sim.total_cost(), abs=1e-9)
+            for c in ("slow", "mid", "fast"):
+                assert res.per_client_cost[c] == pytest.approx(
+                    r.sim.client_cost(c), abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Registry / policy wiring.
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_policies_name_registered_engines(self):
+        for p in POLICIES.values():
+            assert p.engine in ENGINES
+
+    def test_async_policy_uses_async_engine(self):
+        assert get_engine(get_policy("fedcostaware_async").engine) \
+            is AsyncBufferedEngine
+        assert get_engine(get_policy("fedcostaware").engine) is SyncEngine
+
+    def test_unknown_engine_raises(self):
+        with pytest.raises(KeyError):
+            get_engine("nope")
+
+    def test_runner_resolves_engine_from_policy(self):
+        r = FLCloudRunner(FLRunConfig(
+            dataset="t", clients=CLIENTS, n_epochs=1,
+            policy="fedcostaware_async", seed=0), cloud_cfg=CLOUD)
+        assert isinstance(r.engine, AsyncBufferedEngine)
+
+
+# ---------------------------------------------------------------------------
+# SyncEngine: behavior-preserving port. Totals pinned against the
+# pre-refactor monolithic FLCloudRunner (seed commit), tolerance 1e-6.
+# ---------------------------------------------------------------------------
+GOLDEN_SYNC = {
+    "on_demand": 6.17487890305501,
+    "spot": 2.371925358636006,
+    "fedcostaware": 1.689345246824989,
+}
+GOLDEN_MAKESPAN = 7497.201761277703
+
+
+class TestSyncGolden:
+    def test_totals_match_pre_refactor(self):
+        for policy, want in GOLDEN_SYNC.items():
+            res = run_policy(policy)
+            assert res.total_cost == pytest.approx(want, abs=1e-6), policy
+            assert res.makespan_s == pytest.approx(GOLDEN_MAKESPAN,
+                                                   abs=1e-6)
+
+    def test_paper_cost_ordering(self):
+        costs = {p: run_policy(p).total_cost for p in GOLDEN_SYNC}
+        assert costs["fedcostaware"] < costs["spot"] < costs["on_demand"]
+
+    def test_table1_mnist_row_preserved(self):
+        from benchmarks.table1 import ROWS, run_row
+        row = next(r for r in ROWS if r.dataset == "MNIST")
+        want = {"fedcostaware": 2.2597067666666666,
+                "spot": 2.7192071600000003,
+                "on_demand": 6.948240800000001}
+        for policy, cost in want.items():
+            assert run_row(row, policy).total_cost == pytest.approx(
+                cost, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# AsyncBufferedEngine: the scenario the sync barrier cannot express.
+# ---------------------------------------------------------------------------
+STRAGGLER = (
+    ClientProfile("strag", mean_epoch_s=900, jitter=0.0, n_samples=1),
+    ClientProfile("f1", mean_epoch_s=300, jitter=0.0, n_samples=1),
+    ClientProfile("f2", mean_epoch_s=300, jitter=0.0, n_samples=1),
+)
+
+
+class TestAsyncBuffered:
+    def test_async_beats_sync_makespan_with_straggler(self):
+        """One 3x straggler: async completes the same number of rounds
+        in strictly less wall-clock (the fast clients never wait)."""
+        sync = run_policy("fedcostaware", clients=STRAGGLER, n_epochs=6)
+        asy = run_policy("fedcostaware_async", clients=STRAGGLER,
+                         n_epochs=6)
+        assert sync.rounds_completed == asy.rounds_completed == 6
+        assert asy.makespan_s < sync.makespan_s
+
+    def test_per_client_costs_from_accountant(self):
+        res = run_policy("fedcostaware_async", clients=STRAGGLER,
+                         n_epochs=6)
+        assert set(res.per_client_cost) == {"strag", "f1", "f2"}
+        assert all(v > 0 for v in res.per_client_cost.values())
+        assert sum(res.per_client_cost.values()) == pytest.approx(
+            res.total_cost, abs=1e-9)
+
+    def test_buffer_k_controls_round_size(self):
+        res = run_policy("fedcostaware_async", clients=STRAGGLER,
+                         n_epochs=5, buffer_k=2)
+        assert all(len(p) == 2 for p in res.per_round_participants)
+
+    def test_stragglers_roll_into_later_rounds(self):
+        res = run_policy("fedcostaware_async", clients=STRAGGLER,
+                         n_epochs=6)
+        # the straggler contributes, but not to every round
+        rounds_with_strag = [i for i, p in
+                             enumerate(res.per_round_participants)
+                             if "strag" in p]
+        assert 0 < len(rounds_with_strag) < 6
+
+    def test_async_budget_exclusion(self):
+        clients = (
+            ClientProfile("rich", 600, n_samples=2, jitter=0.0),
+            ClientProfile("poor", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        res = run_policy("fedcostaware_async", clients=clients,
+                         n_epochs=10)
+        assert "poor" in res.excluded_clients
+        assert res.rounds_completed == 10
+
+    def test_async_survives_preemption(self):
+        cloud = CloudConfig(preemption_rate_per_hr=0.5,
+                            spot_rate_sigma=0.0)
+        res = run_policy("fedcostaware_async", clients=STRAGGLER,
+                         n_epochs=6, cloud=cloud, seed=3)
+        assert res.rounds_completed == 6
+
+    def test_timeline_well_formed(self):
+        res = run_policy("fedcostaware_async", clients=STRAGGLER,
+                         n_epochs=4)
+        for seg in res.timeline:
+            assert seg.t1 >= seg.t0 >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# ClientReady resume tokens pass through the cluster untouched.
+# ---------------------------------------------------------------------------
+class TestClusterEvents:
+    def test_client_ready_published_for_tracked_instance(self):
+        r = FLCloudRunner(FLRunConfig(
+            dataset="t", clients=CLIENTS, n_epochs=2,
+            policy="fedcostaware", seed=0), cloud_cfg=CLOUD)
+        seen = []
+        r.bus.subscribe(ClientReady, lambda ev: seen.append(ev.client))
+        r.run()
+        assert set(seen) >= {"slow", "mid", "fast"}

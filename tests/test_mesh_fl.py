@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.common import compat
 from repro.fl import mesh_fl
 from repro.models import lm
 from repro.sharding import rules as R
@@ -49,7 +50,7 @@ class TestFedAvgSync:
         glob = jax.tree.map(lambda p: p[0] * 0.9, stk)   # deltas ~0.1 scale
         w = jnp.asarray([1.0, 2.0])
         plain = mesh_fl.fedavg_sync(stk, w)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             comp = jax.jit(
                 lambda s, g, ww: mesh_fl.fedavg_sync_compressed(
                     s, g, ww, mesh, 2))(stk, glob, w)
@@ -79,7 +80,7 @@ class TestFedAvgSync:
         step = mesh_fl.make_fl_round_step(cfg, opt=1e-2, shard=shard,
                                           local_steps=2, mesh=mesh,
                                           n_pods=2)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             new_stk, new_mu, losses = jax.jit(step)(stk, mu, batch, weights)
         assert losses.shape == (2,)
         assert bool(jnp.all(jnp.isfinite(losses)))

@@ -4,6 +4,11 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis "
+    "extra (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.common.config import CloudConfig, ClientProfile, FLRunConfig, \
