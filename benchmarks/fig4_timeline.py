@@ -1,33 +1,73 @@
 """Paper Fig. 4 reproduction: client operational states over time
 (training / spinup / idle / savings) for Fed-ISIC2019, 6 clients x 20
-epochs under FedCostAware. Emits an ASCII Gantt + per-state totals."""
+epochs under FedCostAware. Emits an ASCII Gantt + per-state totals.
+
+Pure reporter: the paper's qualitative claims are asserted in
+tests/test_paper_claims.py (via golden-trace replay), not here.
+
+Offline mode: `--replay run.events.jsonl` renders from a recorded event
+log without re-running the simulation (no CloudSimulator involved);
+`--record path` records the fresh run it renders.
+"""
 from __future__ import annotations
 
+import argparse
+from typing import Optional
+
 from benchmarks.table1 import ROWS, run_row
+from repro.core.eventlog import EventReplayer
+from repro.fl.telemetry import replay_result, state_totals
 
 
-def run():
-    row = ROWS[0]                       # Fed-ISIC2019
-    res = run_row(row, "fedcostaware")
+def describe(header: dict) -> str:
+    """One-line run identity from a recorded trace's metadata header
+    (the same dict `EventRecorder` stamps on every `FLCloudRunner`
+    recording)."""
+    n = header.get("n_clients", len(header.get("clients", [])))
+    return (f"{header.get('dataset', '?')}, {n} clients x "
+            f"{header.get('n_epochs', '?')} epochs, "
+            f"{header.get('policy', '?')}")
+
+
+def header_of(row, policy: str) -> dict:
+    """describe()-compatible header for a fresh Table-1 row run."""
+    return {"dataset": row.dataset, "n_clients": row.n_clients,
+            "n_epochs": row.n_epochs, "policy": policy}
+
+
+def run(replay: Optional[str] = None, record: Optional[str] = None):
+    if replay is not None:
+        replayer = EventReplayer.load(replay)
+        res = replay_result(replayer)
+        desc = describe(replayer.header)
+    else:
+        row = ROWS[0]                   # Fed-ISIC2019
+        res = run_row(row, "fedcostaware", record_to=record)
+        desc = describe(header_of(row, "fedcostaware"))
     by_client = {}
     for seg in res.timeline:
         by_client.setdefault(seg.client, []).append(seg)
-    state_totals = {}
-    for seg in res.timeline:
-        key = (seg.client, seg.state)
-        state_totals[key] = state_totals.get(key, 0.0) + (seg.t1 - seg.t0)
-    return res, by_client, state_totals
+    return res, by_client, state_totals(res.timeline), desc
 
 
 GLYPH = {"training": "#", "spinup": "^", "idle": ".", "savings": " "}
 
 
-def main():
-    res, by_client, totals = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--replay", metavar="EVENTS_JSONL", default=None,
+                      help="render from a recorded event log "
+                           "(no simulation)")
+    mode.add_argument("--record", metavar="EVENTS_JSONL", default=None,
+                      help="record the fresh run's event log to this path")
+    args = ap.parse_args(argv)
+    res, by_client, totals, desc = run(replay=args.replay,
+                                       record=args.record)
     width = 100
     scale = res.makespan_s / width
-    print(f"# Fed-ISIC2019, 6 clients x 20 epochs, FedCostAware "
-          f"(makespan {res.makespan_s/60:.0f} min)")
+    src = f"replay of {args.replay}" if args.replay else "fresh run"
+    print(f"# {desc} (makespan {res.makespan_s/60:.0f} min, {src})")
     print("# '#'=training  '^'=spinup  '.'=idle(billed)  ' '=off(savings)")
     for client in sorted(by_client):
         line = [" "] * width
@@ -43,15 +83,6 @@ def main():
         vals = [totals.get((c, s), 0.0) / 60
                 for s in ("training", "spinup", "idle", "savings")]
         print(f"{c}," + ",".join(f"{v:.1f}" for v in vals))
-    # the paper's qualitative claims, checked quantitatively:
-    # (1) the slowest client never pays spin-up after round 1
-    slow = clients[0]
-    assert totals.get((slow, "savings"), 0.0) == 0.0, \
-        "slowest client should never be terminated"
-    # (2) faster clients convert idle into savings
-    fast = clients[-1]
-    assert totals.get((fast, "savings"), 0.0) > \
-        totals.get((fast, "idle"), 0.0), "fast client should be off most"
 
 
 if __name__ == "__main__":

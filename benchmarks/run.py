@@ -23,17 +23,17 @@ def main() -> None:
     if "table1" in want:
         section("Table I: cost & savings across datasets and policies")
         from benchmarks import table1
-        table1.main()
+        table1.main([])         # empty argv: section names aren't flags
 
     if "fig4" in want:
         section("Fig 4: client operational states over time (Fed-ISIC2019)")
         from benchmarks import fig4_timeline
-        fig4_timeline.main()
+        fig4_timeline.main([])
 
     if "fig5" in want:
         section("Fig 5: accumulated per-client cost (Fed-ISIC2019)")
         from benchmarks import fig5_costs
-        fig5_costs.main()
+        fig5_costs.main([])
 
     if "scaling" in want:
         section("Beyond-paper: savings vs pool size / heterogeneity")

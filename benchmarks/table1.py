@@ -16,8 +16,10 @@ g5.xlarge prices per dataset row.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
-from typing import Dict, List, Tuple
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.common.config import CloudConfig, ClientProfile, FLRunConfig, \
     SchedulerConfig
@@ -61,7 +63,8 @@ ROWS = [
 POLICIES = ("fedcostaware", "fedcostaware_async", "spot", "on_demand")
 
 
-def run_row(row: Table1Row, policy: str, seed: int = 0):
+def run_row(row: Table1Row, policy: str, seed: int = 0,
+            record_to: Optional[Union[str, Path]] = None):
     clients = tuple(
         ClientProfile(f"client_{i}", mean_epoch_s=t, cold_multiplier=1.12,
                       jitter=0.0, n_samples=int(t))
@@ -74,15 +77,27 @@ def run_row(row: Table1Row, policy: str, seed: int = 0):
                         spin_up_sigma=0.0)
     cfg = FLRunConfig(dataset=row.dataset, clients=clients,
                       n_epochs=row.n_epochs, policy=policy, seed=seed)
-    return FLCloudRunner(cfg, cloud_cfg=cloud).run()
+    return FLCloudRunner(cfg, cloud_cfg=cloud,
+                         record_to=record_to).run()
 
 
-def run() -> List[dict]:
+def _trace_path(record_dir: Union[str, Path], dataset: str,
+                policy: str) -> Path:
+    slug = dataset.lower().replace("-", "_")
+    return Path(record_dir) / f"{slug}__{policy}.events.jsonl"
+
+
+def run(record_dir: Optional[Union[str, Path]] = None,
+        only_dataset: Optional[str] = None) -> List[dict]:
     out = []
     for row in ROWS:
+        if only_dataset is not None and row.dataset != only_dataset:
+            continue
         od_cost = None
         for policy in POLICIES:
-            res = run_row(row, policy)
+            rec_path = (_trace_path(record_dir, row.dataset, policy)
+                        if record_dir is not None else None)
+            res = run_row(row, policy, record_to=rec_path)
             target = row.target.get(policy)     # async has no paper column
             rec = {
                 "dataset": row.dataset, "n_clients": row.n_clients,
@@ -110,13 +125,21 @@ def run() -> List[dict]:
     return out
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--record-dir", metavar="DIR", default=None,
+                    help="record every run's event log into DIR as "
+                         "<dataset>__<policy>.events.jsonl")
+    ap.add_argument("--row", metavar="DATASET", default=None,
+                    choices=[r.dataset for r in ROWS],
+                    help="run a single Table-1 row (e.g. MNIST)")
+    args = ap.parse_args(argv)
     print("dataset,algorithm,total_cost,paper_cost,rel_err,"
           "savings_vs_od_pct,paper_savings_pct")
     def fmt(v):
         return "" if v is None else v
 
-    for r in run():
+    for r in run(record_dir=args.record_dir, only_dataset=args.row):
         print(f"{r['dataset']},{r['algorithm']},{r['total_cost']},"
               f"{fmt(r['paper_cost'])},{fmt(r['rel_err'])},"
               f"{fmt(r.get('savings_vs_od_pct'))},"

@@ -14,11 +14,17 @@ one per client) still-open billing segment:
 
 `benchmarks/accounting_bench.py` measures the gap at 100 clients x 200
 rounds.
+
+The accountant is also a *pure replay consumer*: constructed with no
+price book / clock and subscribed to a bus fed by
+`core.eventlog.EventReplayer`, it rebuilds the exact per-client totals
+of the recorded run from the closed `BillingTick`s alone (a complete
+trace terminates every instance, so no open segment is ever priced).
 """
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Callable, Dict, Set
+from typing import Callable, Dict, Optional, Set
 
 from repro.core.events import (BillingTick, EventBus, InstancePreempted,
                                InstanceReady, InstanceTerminated)
@@ -26,8 +32,8 @@ from repro.cloud.pricing import PriceBook
 
 
 class CostAccountant:
-    def __init__(self, bus: EventBus, prices: PriceBook,
-                 clock: Callable[[], float]):
+    def __init__(self, bus: EventBus, prices: Optional[PriceBook] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self._prices = prices
         self._clock = clock
         self._closed: Dict[str, float] = defaultdict(float)
@@ -66,8 +72,8 @@ class CostAccountant:
     # ------------------------------------------------------------------
     def _open_cost(self, inst) -> float:
         t0 = inst._billing_from
-        if t0 is None:
-            return 0.0
+        if t0 is None or self._prices is None:
+            return 0.0          # closed, or replay mode (always closed)
         return self._prices.cost(inst.zone, t0, self._clock(),
                                  inst.on_demand)
 

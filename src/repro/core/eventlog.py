@@ -1,0 +1,171 @@
+"""Event-log record/replay: persist a run's typed event stream, rebuild
+it offline.
+
+`EventRecorder` subscribes (wildcard) to an `EventBus` and serializes
+every frozen event dataclass to JSONL: one header line carrying the
+schema version + run metadata, then one line per event in publish order.
+Object references (`repro.cloud.simulator.Instance`) are replaced by a
+stable snapshot keyed on the instance id, taken at publish time — the
+log is plain data, diffable across runs, and two runs of the same
+seeded config produce byte-comparable streams (the determinism CI job
+relies on this).
+
+`EventReplayer` parses a recorded stream back into typed events
+(instances become frozen `InstanceRef` stand-ins) and re-publishes them
+onto a fresh bus in recorded order. Pure consumers — `CostAccountant`
+with no price book, `TimelineRecorder`, `CostCurveRecorder`
+(fl.telemetry) — then rebuild per-client costs, Fig-4 timelines and
+Fig-5 cost curves without ever touching `CloudSimulator`. That is the
+record-then-audit discipline of Multi-FedLS-style post-hoc cost
+accounting, and it turns recorded traces into golden regression
+fixtures (tests/golden/).
+
+Layering: this module depends only on `core.events` and the stdlib.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Union
+
+from repro.core.events import EVENT_TYPES, Event, EventBus
+
+SCHEMA_VERSION = 1
+
+_SCALARS = (bool, int, float, str)
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceRef:
+    """Replay-side stand-in for a live `Instance`: the recorded snapshot
+    of its scalar fields at event time. Replayed billing segments are
+    always already closed, hence the class-level `_billing_from` — the
+    accountant's open-segment pricing sees `None` and charges nothing.
+    """
+    iid: int
+    client: str
+    zone: str
+    on_demand: bool
+    t_request: float
+    t_ready: Optional[float] = None
+    t_end: Optional[float] = None
+    state: str = "spinning_up"
+
+    _billing_from = None        # class attr on purpose: never a field
+
+
+_INSTANCE_FIELDS = tuple(f.name for f in dataclasses.fields(InstanceRef))
+
+
+# ---------------------------------------------------------------------------
+# Encoding (live objects -> JSON-ready dicts).
+# ---------------------------------------------------------------------------
+def _encode_value(v: Any) -> Any:
+    if v is None or isinstance(v, _SCALARS):
+        return v
+    if hasattr(v, "iid") and hasattr(v, "client"):     # Instance(-Ref)
+        return {"$instance": {f: getattr(v, f, None)
+                              for f in _INSTANCE_FIELDS}}
+    if isinstance(v, dict):
+        return {str(k): _encode_value(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_encode_value(x) for x in v]
+    raise TypeError(f"event field of type {type(v).__name__} is not "
+                    f"serializable: {v!r}")
+
+
+def encode_event(ev: Event) -> Dict[str, Any]:
+    rec: Dict[str, Any] = {"type": type(ev).__name__}
+    for f in dataclasses.fields(ev):
+        rec[f.name] = _encode_value(getattr(ev, f.name))
+    return rec
+
+
+def _decode_value(v: Any) -> Any:
+    if isinstance(v, dict):
+        if "$instance" in v:
+            return InstanceRef(**v["$instance"])
+        return {k: _decode_value(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return tuple(_decode_value(x) for x in v)
+    return v
+
+
+def decode_event(rec: Dict[str, Any]) -> Event:
+    name = rec["type"]
+    if name not in EVENT_TYPES:
+        raise ValueError(f"unknown event type in log: {name!r}")
+    cls = EVENT_TYPES[name]
+    kwargs = {f.name: _decode_value(rec[f.name])
+              for f in dataclasses.fields(cls)}
+    return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Recorder.
+# ---------------------------------------------------------------------------
+class EventRecorder:
+    """Captures every event published on `bus` as an encoded record.
+
+    Events are encoded at publish time, so the log reflects instance
+    state at the instant of each event even though `Instance` objects
+    mutate afterwards.
+    """
+
+    def __init__(self, bus: EventBus, meta: Optional[Dict[str, Any]] = None):
+        self.header: Dict[str, Any] = {"schema": SCHEMA_VERSION,
+                                       **(meta or {})}
+        self.records: List[Dict[str, Any]] = []
+        bus.subscribe_all(self._on_event)
+
+    def _on_event(self, ev: Event) -> None:
+        self.records.append(encode_event(ev))
+
+    # ------------------------------------------------------------------
+    def dumps(self) -> str:
+        # no sort_keys: dataclass field order and profile insertion
+        # order are deterministic, and preserving them keeps replayed
+        # dict iteration (e.g. cost-curve client order) identical to
+        # the live run's.
+        lines = [json.dumps(self.header)]
+        lines.extend(json.dumps(r) for r in self.records)
+        return "\n".join(lines) + "\n"
+
+    def dump(self, path: Union[str, Path]) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(self.dumps())
+        return path
+
+
+# ---------------------------------------------------------------------------
+# Replayer.
+# ---------------------------------------------------------------------------
+class EventReplayer:
+    """Re-publishes a recorded stream onto a bus, in recorded order."""
+
+    def __init__(self, header: Dict[str, Any], events: List[Event]):
+        self.header = header
+        self.events = events
+
+    @classmethod
+    def loads(cls, text: str) -> "EventReplayer":
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        if not lines:
+            raise ValueError("empty event log")
+        header = json.loads(lines[0])
+        if header.get("schema") != SCHEMA_VERSION:
+            raise ValueError(
+                f"event log schema {header.get('schema')!r} != "
+                f"supported {SCHEMA_VERSION}")
+        events = [decode_event(json.loads(ln)) for ln in lines[1:]]
+        return cls(header, events)
+
+    @classmethod
+    def load(cls, path: Union[str, Path]) -> "EventReplayer":
+        return cls.loads(Path(path).read_text())
+
+    def replay(self, bus: EventBus) -> None:
+        for ev in self.events:
+            bus.publish(ev)

@@ -8,9 +8,14 @@ The FedCostAware stack is layered (PR: multi-layer refactor):
                       lifecycle, re-publishes client-level events
                       (ClientReady, ClientLost)
   RoundEngine      -- subscribes to client events, owns FL-round
-                      semantics (sync barrier / async buffered)
+                      semantics (sync barrier / async buffered), and
+                      publishes engine-level telemetry (RoundStarted,
+                      RoundCompleted, ClientStateChanged,
+                      BudgetExhausted)
   CostAccountant   -- subscribes to billing events, maintains per-client
                       accrued cost incrementally (O(1) queries)
+  EventRecorder    -- wildcard subscriber (core.eventlog): serializes
+                      the full stream to JSONL for offline replay
 
 Events are frozen dataclasses dispatched by exact type. Publishing is
 synchronous: `publish` invokes every subscriber before returning, so the
@@ -22,7 +27,8 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Any, Callable, Dict, List, Optional, Type
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Tuple,
+                    Type)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +108,79 @@ class ClientLost(Event):
 
 
 # ---------------------------------------------------------------------------
+# Engine-level telemetry events (published by RoundEngines / the runner).
+# These make a run fully observable on the bus: an `EventRecorder`
+# (core.eventlog) that captures them plus the cloud/cluster events above
+# holds everything needed to rebuild timelines and cost curves offline.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RoundStarted(Event):
+    """An FL round opened with the given participant set."""
+    round_idx: int
+    participants: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCompleted(Event):
+    """Aggregation fired for `round_idx`.
+
+    `client_costs` is the accountant's cumulative per-client spend at
+    the instant of aggregation — recorded here so replay consumers can
+    rebuild the Fig-5 cost curve without re-pricing open segments.
+    """
+    round_idx: int
+    participants: Tuple[str, ...]
+    client_costs: Mapping[str, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientStateChanged(Event):
+    """Fig-4 operational-state transition for one client.
+
+    `state` is one of spinup | training | idle | savings | done; "done"
+    closes the client's timeline without opening a new segment.
+    """
+    client: str
+    state: str
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetExhausted(Event):
+    """Budget screening (§III-E) permanently excluded `client`."""
+    client: str
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCompleted(Event):
+    """Terminal event carrying the run summary.
+
+    Published by the composition root *after* the event heap drains (the
+    sync engine's makespan includes post-finish drain time, so only the
+    runner knows it). `client_costs` equals the accountant's final
+    per-client totals; costs are frozen once the engine finishes, so the
+    snapshot is identical at finish and at drain.
+    """
+    makespan_s: float
+    total_cost: float
+    client_costs: Mapping[str, float]
+    rounds_completed: int
+    excluded_clients: Tuple[str, ...]
+    final_round_idx: int
+
+
+# Name -> type registry for (de)serialization (core.eventlog). Every
+# event class that can appear on a recorded bus must be listed.
+EVENT_TYPES: Dict[str, Type[Event]] = {
+    cls.__name__: cls for cls in (
+        InstanceRequested, InstanceReady, InstancePreempted,
+        InstanceTerminated, BillingTick, ClientReady, ClientLost,
+        RoundStarted, RoundCompleted, ClientStateChanged,
+        BudgetExhausted, RunCompleted,
+    )
+}
+
+
+# ---------------------------------------------------------------------------
 # Bus.
 # ---------------------------------------------------------------------------
 Handler = Callable[[Event], None]
@@ -112,15 +191,27 @@ class EventBus:
 
     def __init__(self):
         self._subs: Dict[Type[Event], List[Handler]] = defaultdict(list)
+        self._all: List[Handler] = []
 
     def subscribe(self, etype: Type[Event], handler: Handler) -> Handler:
         self._subs[etype].append(handler)
         return handler
 
+    def subscribe_all(self, handler: Handler) -> Handler:
+        """Wildcard subscription: `handler` sees every published event
+        (before type-keyed subscribers). Used by the event recorder."""
+        self._all.append(handler)
+        return handler
+
     def unsubscribe(self, etype: Type[Event], handler: Handler) -> None:
         self._subs[etype].remove(handler)
 
+    def unsubscribe_all(self, handler: Handler) -> None:
+        self._all.remove(handler)
+
     def publish(self, event: Event) -> None:
         # snapshot: a handler may (un)subscribe while we iterate
+        for h in list(self._all):
+            h(event)
         for h in list(self._subs[type(event)]):
             h(event)

@@ -22,23 +22,20 @@ from typing import Any, Dict, Optional
 
 from repro.cloud.simulator import CloudSimulator, Instance
 from repro.common.config import ClientProfile
-from repro.core.events import (ClientLost, ClientReady, InstancePreempted,
-                               InstanceReady)
+from repro.core.events import (ClientLost, ClientReady, ClientStateChanged,
+                               InstancePreempted, InstanceReady)
 from repro.core.policies import Policy
 from repro.core.scheduler import FedCostAwareScheduler
-from repro.fl.telemetry import TimelineRecorder
 
 
 class ClusterManager:
     def __init__(self, sim: CloudSimulator, policy: Policy,
                  profiles: Dict[str, ClientProfile],
-                 scheduler: FedCostAwareScheduler,
-                 timeline: TimelineRecorder):
+                 scheduler: FedCostAwareScheduler):
         self.sim = sim
         self.policy = policy
         self.profiles = profiles
         self.scheduler = scheduler
-        self.timeline = timeline
         self.instances: Dict[str, Optional[Instance]] = {
             c: None for c in profiles}
         self._fresh: Dict[int, bool] = {}       # iid -> no epoch done yet
@@ -64,7 +61,8 @@ class ClusterManager:
         self._fresh[inst.iid] = True
         if resume_token is not None:
             self._resume_tokens[inst.iid] = resume_token
-        self.timeline.mark(client, "spinup")
+        self.sim.bus.publish(
+            ClientStateChanged(self.sim.now, client, "spinup"))
         return inst
 
     def terminate(self, client: str) -> Optional[Instance]:

@@ -47,9 +47,10 @@ class AsyncBufferedEngine(BaseEngine):
 
     def _launch(self):
         self._round_idx = 0
-        for c, p in self.profiles.items():
-            if p.join_round <= 0:
-                self._join(c)
+        joins = [c for c, p in self.profiles.items() if p.join_round <= 0]
+        self._publish_round_started(0, joins)
+        for c in joins:
+            self._join(c)
 
     def _join(self, c: str):
         self._active.append(c)
@@ -75,7 +76,7 @@ class AsyncBufferedEngine(BaseEngine):
             else self._sample_duration(c, cold)
         self._train_start[c] = self.sim.now
         self._train_duration[c] = dur
-        self.timeline.mark(c, "training")
+        self._mark(c, "training")
         iid = self.cluster.instance_of(c).iid
         self._task[c] = iid
         if duration is not None:
@@ -111,7 +112,7 @@ class AsyncBufferedEngine(BaseEngine):
         if self.hooks:
             self.hooks.run_local(c, self._round_idx)
         self._buffer.append(c)
-        self.timeline.mark(c, "idle")
+        self._mark(c, "idle")
         # exclusions may shrink the pool below buffer_k; clamp so the
         # run can still make progress (else it would spin forever)
         k_eff = min(self.buffer_k, max(1, len(self._active)))
@@ -130,20 +131,27 @@ class AsyncBufferedEngine(BaseEngine):
         if self.hooks:
             self.hooks.aggregate(participants, r)
         self.per_round_participants.append(participants)
-        self._record_costs()
+        snap = self._cost_snapshot()
+        self._record_costs(snap)
+        self._publish_round_completed(r, participants, snap)
         if r + 1 >= self.run_cfg.n_epochs:
             self._finish_run()
             return
-        self._round_idx = r + 1
         if self.policy.enforce_budgets:
             self._screen_budgets()
             if not self._active and not self._buffer:
+                # round r+1 never opens: keep _round_idx at the last
+                # completed round so rounds_completed == #RoundCompleted.
                 self._finish_run()
                 return
-        for c, p in self.profiles.items():
-            if c not in self._active and c not in self.excluded \
-                    and p.join_round <= self._round_idx:
-                self._join(c)
+        self._round_idx = r + 1
+        joins = [c for c, p in self.profiles.items()
+                 if c not in self._active and c not in self.excluded
+                 and p.join_round <= self._round_idx]
+        self._publish_round_started(
+            self._round_idx, list(self._active) + joins)
+        for c in joins:
+            self._join(c)
 
     def _screen_budgets(self):
         self._sync_budgets()
@@ -151,11 +159,12 @@ class AsyncBufferedEngine(BaseEngine):
             list(self._active), self._spot_price_of)
         for c in [c for c in self._active if c not in keep]:
             self.excluded.append(c)
+            self._publish_budget_exhausted(c)
             self._active.remove(c)
             self._task.pop(c, None)
             self._pending_dispatch.discard(c)
             if self.cluster.instance_of(c) is not None:
-                self.timeline.mark(c, "idle")
+                self._mark(c, "idle")
                 self.cluster.terminate(c)
 
     # ------------------------------------------------------------------
@@ -177,7 +186,7 @@ class AsyncBufferedEngine(BaseEngine):
         if self._done or c not in self._active:
             return
         if self._task.pop(c, None) is None:
-            self.timeline.mark(c, "savings")
+            self._mark(c, "savings")
             self._pending_dispatch.add(c)       # re-request on next need
             self.cluster.request(c)
             return
@@ -194,6 +203,5 @@ class AsyncBufferedEngine(BaseEngine):
         for c in self.profiles:
             if self.cluster.instance_of(c) is not None:
                 self.cluster.terminate(c)       # stragglers cut off here
-                self.timeline.mark(c, "done")
+            self._mark(c, "done")
         self._record_costs()
-        self.timeline.close()

@@ -26,7 +26,9 @@ from repro.cloud.accounting import CostAccountant
 from repro.cloud.simulator import CloudSimulator
 from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
                                  SchedulerConfig)
-from repro.core.events import ClientLost, ClientReady
+from repro.core.events import (BudgetExhausted, ClientLost, ClientReady,
+                               ClientStateChanged, RoundCompleted,
+                               RoundStarted)
 from repro.core.policies import Policy
 from repro.core.scheduler import FedCostAwareScheduler
 from repro.fl.cluster import ClusterManager
@@ -122,11 +124,35 @@ class BaseEngine:
         return self.sim.prices.price(zone, self.sim.now,
                                      self.policy.on_demand)
 
-    def _record_costs(self):
-        for c in self.profiles:
+    # ------------------------------------------------------------------
+    # Telemetry publication. Engines never write to the timeline or the
+    # recorder directly — every observation goes through the bus, so
+    # record/replay consumers (core.eventlog, fl.telemetry) see exactly
+    # what the live consumers see.
+    # ------------------------------------------------------------------
+    def _mark(self, c: str, state: str):
+        self.sim.bus.publish(ClientStateChanged(self.sim.now, c, state))
+
+    def _publish_round_started(self, r: int, participants):
+        self.sim.bus.publish(
+            RoundStarted(self.sim.now, r, tuple(participants)))
+
+    def _publish_round_completed(self, r: int, participants, snapshot):
+        self.sim.bus.publish(RoundCompleted(
+            self.sim.now, r, tuple(participants), snapshot))
+
+    def _publish_budget_exhausted(self, c: str):
+        self.sim.bus.publish(BudgetExhausted(self.sim.now, c))
+
+    def _cost_snapshot(self) -> Dict[str, float]:
+        return {c: self.accountant.client_cost(c) for c in self.profiles}
+
+    def _record_costs(self, snapshot: Optional[Dict[str, float]] = None):
+        snap = snapshot if snapshot is not None else self._cost_snapshot()
+        for c, cost in snap.items():
             self.cost_curve.append({
                 "t": self.sim.now, "client": c,
-                "cum_cost": self.accountant.client_cost(c),
+                "cum_cost": cost,
                 "round": self._round_idx,
             })
 

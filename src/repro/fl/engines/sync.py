@@ -49,7 +49,6 @@ class SyncEngine(BaseEngine):
         if r >= self.run_cfg.n_epochs:
             self._finish_run()
             return
-        self._round_idx = r
         self.scheduler.begin_round(r)
         # elastic scaling: clients may join at a later round (§V future
         # work); budget exhaustion below is the symmetric leave path.
@@ -64,15 +63,21 @@ class SyncEngine(BaseEngine):
             newly_excluded = before - set(clients)
             for c in newly_excluded:
                 self.excluded.append(c)
+                self._publish_budget_exhausted(c)
                 if self.cluster.instance_of(c) is not None:
-                    self.timeline.mark(c, "idle")
+                    self._mark(c, "idle")
                     self.cluster.terminate(c)
         if not clients:
+            # nobody makes it into round r: it never ran, so leave
+            # _round_idx at the last *completed* round (keeps
+            # rounds_completed == #RoundCompleted events).
             self._finish_run()
             return
+        self._round_idx = r
         self._participants = clients
         self.per_round_participants.append(list(clients))
         self._round_pending = set(clients)
+        self._publish_round_started(r, clients)
         for c in clients:
             self._dispatch(c, r)
 
@@ -100,7 +105,7 @@ class SyncEngine(BaseEngine):
             self._pending_task[c] = None
             self._begin_training(c, cold=True)
         else:
-            self.timeline.mark(c, "idle")  # pre-warmed, waits for next round
+            self._mark(c, "idle")  # pre-warmed, waits for next round
 
     # ------------------------------------------------------------------
     # Local training execution (simulated duration; real JAX via hooks).
@@ -110,7 +115,7 @@ class SyncEngine(BaseEngine):
         dur = self._sample_duration(c, cold)
         self._train_start[c] = self.sim.now
         self._train_duration[c] = dur
-        self.timeline.mark(c, "training")
+        self._mark(c, "training")
         iid = self.cluster.instance_of(c).iid
         self.sim.schedule_in(dur, lambda: self._finish_training(c, r, iid))
 
@@ -141,14 +146,14 @@ class SyncEngine(BaseEngine):
         if self.hooks:
             self.hooks.run_local(c, r)
         self._round_pending.discard(c)
-        self.timeline.mark(c, "idle")
+        self._mark(c, "idle")
 
         if self.policy.manage_lifecycle and self._round_pending:
             more = (r + 1) < self.run_cfg.n_epochs
             prewarm_t = self.scheduler.evaluate_termination(c, t, more)
             if prewarm_t is not None:
                 self.cluster.terminate(c)
-                self.timeline.mark(c, "savings")
+                self._mark(c, "savings")
                 if math.isfinite(prewarm_t):
                     self.cluster.schedule_prewarm(c, prewarm_t)
 
@@ -163,7 +168,7 @@ class SyncEngine(BaseEngine):
         was_training = c in self._round_pending and c in self._train_start
         if not was_training:
             # idle / pre-warmed instance lost: next dispatch re-requests
-            self.timeline.mark(c, "savings")
+            self._mark(c, "savings")
             return
         # Progress up to the last periodic checkpoint survives (§III-D):
         # the client reloads from cloud storage and resumes mid-epoch.
@@ -190,7 +195,7 @@ class SyncEngine(BaseEngine):
         self._resumed.add(c)
         self._train_start[c] = self.sim.now
         self._train_duration[c] = remaining
-        self.timeline.mark(c, "training")
+        self._mark(c, "training")
         r = self._round_idx
         iid = ev.instance.iid
         self.sim.schedule_in(
@@ -200,7 +205,9 @@ class SyncEngine(BaseEngine):
     def _end_round(self, r: int):
         if self.hooks:
             self.hooks.aggregate(list(self._participants), r)
-        self._record_costs()
+        snap = self._cost_snapshot()
+        self._record_costs(snap)
+        self._publish_round_completed(r, self._participants, snap)
         self.sim.schedule_in(1.0, lambda: self._start_round(r + 1))
 
     def _finish_run(self):
@@ -209,6 +216,5 @@ class SyncEngine(BaseEngine):
         for c in self.profiles:
             if self.cluster.instance_of(c) is not None:
                 self.cluster.terminate(c)
-                self.timeline.mark(c, "done")
+            self._mark(c, "done")
         self._record_costs()
-        self.timeline.close()

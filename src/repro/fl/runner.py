@@ -24,17 +24,26 @@ mirroring the paper's scaled-duration simulation setup for MNIST/CIFAR.
 Outputs (`RunResult`): per-client costs, a Fig-4 style state timeline, a
 Fig-5 style cumulative cost curve, and the trained model (when hooks
 attached).
+
+Every run is recordable: `record=True` attaches an `EventRecorder`
+(core.eventlog) capturing the full typed event stream in memory, and
+`record_to=<path>` additionally persists it as JSONL at the end of
+`run()`. A recorded trace replays offline through
+`repro.fl.telemetry.replay_result` — same timelines, same costs, no
+simulation.
 """
 from __future__ import annotations
 
-from typing import Optional
+from pathlib import Path
+from typing import Optional, Union
 
 import numpy as np
 
 from repro.cloud.accounting import CostAccountant
 from repro.cloud.simulator import CloudSimulator
 from repro.common.config import CloudConfig, FLRunConfig, SchedulerConfig
-from repro.core.events import EventBus
+from repro.core.events import EventBus, RunCompleted
+from repro.core.eventlog import EventRecorder
 from repro.core.policies import Policy, get_policy, make_scheduler
 from repro.fl.cluster import ClusterManager
 from repro.fl.engines import EngineContext, get_engine
@@ -49,17 +58,31 @@ class FLCloudRunner:
                  cloud_cfg: Optional[CloudConfig] = None,
                  sched_cfg: Optional[SchedulerConfig] = None,
                  hooks: Optional[TrainerHooks] = None,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 record_to: Optional[Union[str, Path]] = None,
+                 record: bool = False):
         self.run_cfg = run_cfg
         self.cloud_cfg = cloud_cfg or CloudConfig()
         self.sched_cfg = sched_cfg or SchedulerConfig()
         self.policy: Policy = get_policy(run_cfg.policy)
         seed = run_cfg.seed if seed is None else seed
+        self.record_to = record_to
 
         # layer wiring — construction order fixes bus subscription order:
-        # accounting sees cloud events before the cluster re-publishes
-        # them as client events, and engines only ever see client events.
+        # the recorder (wildcard) sees everything first, accounting sees
+        # cloud events before the cluster re-publishes them as client
+        # events, and engines only ever see client events.
         self.bus = EventBus()
+        # only attached on request: encoding every event and retaining
+        # the stream is pure overhead for callers that just want a
+        # RunResult. `record=True` keeps it in memory (self.recorder);
+        # `record_to` additionally persists it after run().
+        self.recorder: Optional[EventRecorder] = None
+        if record or record_to is not None:
+            self.recorder = EventRecorder(self.bus, meta={
+                "dataset": run_cfg.dataset, "policy": run_cfg.policy,
+                "seed": seed, "n_epochs": run_cfg.n_epochs,
+                "clients": [c.name for c in run_cfg.clients]})
         self.sim = CloudSimulator(self.cloud_cfg, seed=seed, bus=self.bus)
         self.accountant = CostAccountant(self.bus, self.sim.prices,
                                          clock=lambda: self.sim.now)
@@ -68,9 +91,9 @@ class FLCloudRunner:
         self.profiles = {c.name: c for c in run_cfg.clients}
         for c in run_cfg.clients:
             self.scheduler.ledger.register(c.name, c.budget)
-        self.timeline = TimelineRecorder(lambda: self.sim.now)
+        self.timeline = TimelineRecorder(self.bus)
         self.cluster = ClusterManager(self.sim, self.policy, self.profiles,
-                                      self.scheduler, self.timeline)
+                                      self.scheduler)
         self.hooks = hooks
         self.engine = get_engine(self.policy.engine)(EngineContext(
             run_cfg=run_cfg, cloud_cfg=self.cloud_cfg,
@@ -83,4 +106,19 @@ class FLCloudRunner:
     def run(self) -> RunResult:
         self.engine.start()
         self.sim.run_until_idle()
-        return self.engine.result()
+        self.timeline.close(self.sim.now)   # no-op on complete runs
+        res = self.engine.result()
+        # terminal summary, published after the drain: the sync engine's
+        # makespan includes post-finish drain time, so only here is the
+        # true makespan known. Costs are frozen once the engine finishes,
+        # making this snapshot == the accountant's state at finish.
+        self.bus.publish(RunCompleted(
+            self.sim.now, makespan_s=res.makespan_s,
+            total_cost=res.total_cost,
+            client_costs=dict(res.per_client_cost),
+            rounds_completed=res.rounds_completed,
+            excluded_clients=tuple(res.excluded_clients),
+            final_round_idx=res.rounds_completed - 1))
+        if self.record_to is not None:
+            self.recorder.dump(self.record_to)
+        return res

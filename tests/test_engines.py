@@ -257,6 +257,88 @@ class TestAsyncBuffered:
 
 
 # ---------------------------------------------------------------------------
+# AsyncBufferedEngine edge cases: buffer_k beyond the pool, preemption
+# of an already-buffered client, budget exhaustion shrinking the pool
+# below buffer_k.
+# ---------------------------------------------------------------------------
+class TestAsyncEdgeCases:
+    def test_buffer_k_larger_than_pool_clamps(self):
+        """buffer_k > n_clients must clamp to the pool size (wait for
+        everyone) instead of deadlocking on an unreachable target."""
+        res = run_policy("fedcostaware_async", clients=STRAGGLER,
+                         n_epochs=4, buffer_k=10)
+        assert res.rounds_completed == 4
+        assert all(len(p) == 3 for p in res.per_round_participants)
+
+    def test_preempt_client_with_buffered_result(self):
+        """Preempting a client *after* its result entered the buffer
+        must not lose the contribution: the buffered result still
+        aggregates, the client recovers and keeps participating."""
+        cfg = FLRunConfig(dataset="t", clients=STRAGGLER, n_epochs=4,
+                          policy="fedcostaware_async", seed=0,
+                          buffer_k=3)
+        r = FLCloudRunner(cfg, cloud_cfg=CLOUD, record=True)
+        # f1 (300s epoch) buffers its round-0 result by ~500s, long
+        # before strag (900s) closes the buffer at ~1200s; preempting at
+        # 700s hits f1 while that result sits in the open buffer (f1 is
+        # already mid-flight on its next epoch). The buffered result
+        # must still aggregate into round 0.
+        def preempt_f1():
+            inst = r.cluster.instance_of("f1")
+            assert inst is not None
+            assert r.sim.preempt(inst)
+        r.sim.schedule(700.0, preempt_f1)
+        res = r.run()
+        preempted = [rec for rec in r.recorder.records
+                     if rec["type"] == "InstancePreempted"]
+        assert any(p["instance"]["$instance"]["client"] == "f1"
+                   for p in preempted)
+        assert "f1" in res.per_round_participants[0]
+        assert res.rounds_completed == 4
+        assert any("f1" in p for p in res.per_round_participants[1:])
+
+    def test_budget_exhaustion_mid_buffer(self):
+        """A client excluded at a round boundary while the next buffer
+        is filling: its in-flight task goes stale, the effective buffer
+        target shrinks below buffer_k, and the run still completes."""
+        clients = (
+            ClientProfile("rich", 600, n_samples=2, jitter=0.0),
+            ClientProfile("mid", 400, n_samples=1, jitter=0.0),
+            ClientProfile("poor", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        res = run_policy("fedcostaware_async", clients=clients,
+                         n_epochs=10, buffer_k=3)
+        assert "poor" in res.excluded_clients
+        assert res.rounds_completed == 10
+        exclusion_round = next(
+            i for i, p in enumerate(res.per_round_participants)
+            if "poor" not in p)
+        # never reappears once the ledger excluded it
+        for p in res.per_round_participants[exclusion_round:]:
+            assert "poor" not in p
+        # post-exclusion rounds aggregate with the clamped pool of 2
+        assert all(0 < len(p) <= 2
+                   for p in res.per_round_participants[exclusion_round:])
+
+    def test_budget_exhaustion_terminates_instance(self):
+        clients = (
+            ClientProfile("rich", 600, n_samples=2, jitter=0.0),
+            ClientProfile("poor", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=10,
+                          policy="fedcostaware_async", seed=0)
+        r = FLCloudRunner(cfg, cloud_cfg=CLOUD)
+        res = r.run()
+        assert "poor" in res.excluded_clients
+        assert r.cluster.instance_of("poor") is None
+        # spend stops at exclusion: poor's cost never exceeds budget by
+        # more than the already-open billing segment's minimum charge
+        assert res.per_client_cost["poor"] < 0.15
+
+
+# ---------------------------------------------------------------------------
 # ClientReady resume tokens pass through the cluster untouched.
 # ---------------------------------------------------------------------------
 class TestClusterEvents:

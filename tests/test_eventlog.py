@@ -1,0 +1,303 @@
+"""Unit tests for the event-log record/replay subsystem
+(core.eventlog) and the engine-level telemetry events that feed it."""
+import json
+
+import pytest
+
+from repro.cloud.accounting import CostAccountant
+from repro.cloud.simulator import CloudSimulator
+from repro.common.config import CloudConfig, ClientProfile, FLRunConfig
+from repro.core.events import (EVENT_TYPES, BillingTick, BudgetExhausted,
+                               ClientReady, ClientStateChanged, EventBus,
+                               InstancePreempted, InstanceReady,
+                               RoundCompleted, RoundStarted, RunCompleted)
+from repro.core.eventlog import (SCHEMA_VERSION, EventRecorder,
+                                 EventReplayer, InstanceRef, decode_event,
+                                 encode_event)
+from repro.fl.runner import FLCloudRunner
+from repro.fl.telemetry import (CostCurveRecorder, TimelineRecorder,
+                                replay_result, state_totals)
+
+CLOUD = CloudConfig(spot_rate_sigma=0.0)
+CLIENTS = (
+    ClientProfile("slow", mean_epoch_s=900, jitter=0.0, n_samples=3),
+    ClientProfile("mid", mean_epoch_s=450, jitter=0.0, n_samples=2),
+    ClientProfile("fast", mean_epoch_s=150, jitter=0.0, n_samples=1),
+)
+ALL_POLICIES = ("on_demand", "spot", "fedcostaware", "fedcostaware_async")
+
+
+def make_runner(policy, cloud=None, seed=0, n_epochs=4, **cfg_kw):
+    cfg = FLRunConfig(dataset="t", clients=CLIENTS, n_epochs=n_epochs,
+                      policy=policy, seed=seed, **cfg_kw)
+    return FLCloudRunner(cfg, cloud_cfg=cloud or CLOUD, record=True)
+
+
+# ---------------------------------------------------------------------------
+# Bus wildcard subscription.
+# ---------------------------------------------------------------------------
+class TestSubscribeAll:
+    def test_wildcard_sees_every_type(self):
+        bus = EventBus()
+        got = []
+        bus.subscribe_all(got.append)
+        bus.publish(ClientStateChanged(1.0, "a", "training"))
+        bus.publish(BudgetExhausted(2.0, "a"))
+        assert [type(e).__name__ for e in got] == \
+            ["ClientStateChanged", "BudgetExhausted"]
+
+    def test_wildcard_runs_before_typed(self):
+        bus = EventBus()
+        order = []
+        bus.subscribe(BudgetExhausted, lambda ev: order.append("typed"))
+        bus.subscribe_all(lambda ev: order.append("all"))
+        bus.publish(BudgetExhausted(0.0, "c"))
+        assert order == ["all", "typed"]
+
+    def test_unsubscribe_all(self):
+        bus = EventBus()
+        got = []
+        h = bus.subscribe_all(got.append)
+        bus.unsubscribe_all(h)
+        bus.publish(BudgetExhausted(0.0, "c"))
+        assert got == []
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode.
+# ---------------------------------------------------------------------------
+class TestCodec:
+    def test_instance_snapshot_replaces_reference(self):
+        sim = CloudSimulator(CLOUD, seed=0)
+        inst = sim.request_instance("a")
+        rec = encode_event(InstanceReady(1.5, inst))
+        assert rec["type"] == "InstanceReady"
+        snap = rec["instance"]["$instance"]
+        assert snap["iid"] == inst.iid and snap["client"] == "a"
+        ev = decode_event(rec)
+        assert isinstance(ev.instance, InstanceRef)
+        assert ev.instance.iid == inst.iid
+        assert ev.instance._billing_from is None
+
+    def test_roundtrip_all_engine_events(self):
+        events = [
+            RoundStarted(0.0, 0, ("a", "b")),
+            RoundCompleted(9.0, 0, ("a",), {"a": 0.5, "b": 0.25}),
+            ClientStateChanged(1.0, "a", "training"),
+            BudgetExhausted(2.0, "b"),
+            RunCompleted(10.0, 9.5, 0.75, {"a": 0.5, "b": 0.25}, 3,
+                         ("b",), 2),
+            ClientReady(3.0, "a", InstanceRef(1, "a", "z0", False, 0.0),
+                        True, {"round": 1, "remaining": 4.5}),
+            BillingTick(4.0, InstanceRef(1, "a", "z0", False, 0.0), "a",
+                        1.0, 4.0, 0.01),
+        ]
+        for ev in events:
+            rec = encode_event(ev)
+            json.dumps(rec)                     # JSON-serializable
+            rec2 = encode_event(decode_event(rec))
+            assert rec2 == rec, type(ev).__name__
+
+    def test_every_registered_type_decodable(self):
+        assert set(EVENT_TYPES) >= {
+            "InstanceRequested", "InstanceReady", "InstancePreempted",
+            "InstanceTerminated", "BillingTick", "ClientReady",
+            "ClientLost", "RoundStarted", "RoundCompleted",
+            "ClientStateChanged", "BudgetExhausted", "RunCompleted"}
+
+    def test_unknown_type_raises(self):
+        with pytest.raises(ValueError, match="unknown event type"):
+            decode_event({"type": "NopeEvent", "t": 0.0})
+
+    def test_unserializable_field_raises(self):
+        with pytest.raises(TypeError, match="not.*serializable"):
+            encode_event(ClientReady(0.0, "a", object(), True))
+
+
+# ---------------------------------------------------------------------------
+# Recorder / replayer plumbing.
+# ---------------------------------------------------------------------------
+class TestRecorderReplayer:
+    def test_header_carries_schema_and_meta(self):
+        bus = EventBus()
+        rec = EventRecorder(bus, meta={"dataset": "d", "seed": 3})
+        assert rec.header == {"schema": SCHEMA_VERSION, "dataset": "d",
+                              "seed": 3}
+
+    def test_dump_load_roundtrip(self, tmp_path):
+        bus = EventBus()
+        rec = EventRecorder(bus, meta={"k": "v"})
+        bus.publish(ClientStateChanged(1.0, "a", "spinup"))
+        bus.publish(ClientStateChanged(2.0, "a", "training"))
+        p = rec.dump(tmp_path / "run.events.jsonl")
+        rep = EventReplayer.load(p)
+        assert rep.header["k"] == "v"
+        assert [type(e).__name__ for e in rep.events] == \
+            ["ClientStateChanged"] * 2
+        assert rep.events[1].t == 2.0
+
+    def test_empty_log_rejected(self):
+        with pytest.raises(ValueError, match="empty"):
+            EventReplayer.loads("")
+
+    def test_replay_preserves_order(self):
+        bus = EventBus()
+        rec = EventRecorder(bus)
+        for i in range(5):
+            bus.publish(ClientStateChanged(float(i), "a", "idle"))
+        out = EventBus()
+        got = []
+        out.subscribe(ClientStateChanged, lambda ev: got.append(ev.t))
+        EventReplayer.loads(rec.dumps()).replay(out)
+        assert got == [0.0, 1.0, 2.0, 3.0, 4.0]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level telemetry events on live runs.
+# ---------------------------------------------------------------------------
+class TestEngineTelemetry:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_round_events_bracket_every_round(self, policy):
+        r = make_runner(policy)
+        res = r.run()
+        types = [rec["type"] for rec in r.recorder.records]
+        assert types.count("RoundCompleted") == res.rounds_completed
+        assert types.count("RunCompleted") == 1
+        assert types[-1] == "RunCompleted"
+        started = [rec for rec in r.recorder.records
+                   if rec["type"] == "RoundStarted"]
+        assert [s["round_idx"] for s in started] == \
+            list(range(res.rounds_completed))
+
+    def test_round_completed_carries_cost_snapshots(self):
+        r = make_runner("fedcostaware")
+        r.run()
+        completed = [rec for rec in r.recorder.records
+                     if rec["type"] == "RoundCompleted"]
+        for rec in completed:
+            assert set(rec["client_costs"]) == {"slow", "mid", "fast"}
+        # cumulative: each client's snapshot is non-decreasing
+        for c in ("slow", "mid", "fast"):
+            seq = [rec["client_costs"][c] for rec in completed]
+            assert all(b >= a - 1e-9 for a, b in zip(seq, seq[1:]))
+
+    @pytest.mark.parametrize("policy",
+                             ["fedcostaware", "fedcostaware_async"])
+    def test_round_invariant_when_all_clients_exhausted(self, policy):
+        """When budget screening empties the pool, the never-opened
+        round must not count: rounds_completed == #RoundCompleted and
+        RoundStarted indices stay contiguous."""
+        clients = (
+            ClientProfile("p1", 300, n_samples=1, jitter=0.0,
+                          budget=0.05),
+            ClientProfile("p2", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=10,
+                          policy=policy, seed=0)
+        r = FLCloudRunner(cfg, cloud_cfg=CLOUD, record=True)
+        res = r.run()
+        assert set(res.excluded_clients) == {"p1", "p2"}
+        assert res.rounds_completed < 10
+        types = [rec["type"] for rec in r.recorder.records]
+        assert types.count("RoundCompleted") == res.rounds_completed
+        started = [rec["round_idx"] for rec in r.recorder.records
+                   if rec["type"] == "RoundStarted"]
+        assert started == list(range(res.rounds_completed))
+        # final cost-curve records are labeled with a round that ran
+        assert max(rec["round"] for rec in res.cost_curve) == \
+            res.rounds_completed - 1
+
+    def test_budget_exhausted_published(self):
+        clients = (
+            ClientProfile("rich", 600, n_samples=2, jitter=0.0),
+            ClientProfile("poor", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=10,
+                          policy="fedcostaware", seed=0)
+        r = FLCloudRunner(cfg, cloud_cfg=CLOUD, record=True)
+        res = r.run()
+        assert "poor" in res.excluded_clients
+        exhausted = [rec["client"] for rec in r.recorder.records
+                     if rec["type"] == "BudgetExhausted"]
+        assert exhausted == ["poor"]
+
+    def test_client_state_changes_match_timeline(self):
+        r = make_runner("fedcostaware")
+        res = r.run()
+        opens = [rec for rec in r.recorder.records
+                 if rec["type"] == "ClientStateChanged"
+                 and rec["state"] != "done"]
+        assert len(opens) == len(res.timeline)
+        for rec, seg in zip(opens, res.timeline):
+            assert (rec["client"], rec["state"], rec["t"]) == \
+                (seg.client, seg.state, seg.t0)
+
+
+# ---------------------------------------------------------------------------
+# Live vs replayed equality (the differential oracle), all policies,
+# with and without preemption.
+# ---------------------------------------------------------------------------
+SCENARIOS = [(p, CLOUD, 0) for p in ALL_POLICIES] + [
+    ("fedcostaware",
+     CloudConfig(preemption_rate_per_hr=0.5, spot_rate_sigma=0.0), 3),
+    ("fedcostaware_async",
+     CloudConfig(preemption_rate_per_hr=0.5, spot_rate_sigma=0.0), 3),
+]
+
+
+class TestLiveVsReplay:
+    @pytest.mark.parametrize("policy,cloud,seed", SCENARIOS)
+    def test_replay_reproduces_live_run(self, policy, cloud, seed):
+        r = make_runner(policy, cloud=cloud, seed=seed, n_epochs=6)
+        live = r.run()
+        rep = replay_result(EventReplayer.loads(r.recorder.dumps()))
+        assert rep.total_cost == pytest.approx(live.total_cost, abs=1e-9)
+        for c in live.per_client_cost:
+            assert rep.per_client_cost[c] == pytest.approx(
+                live.per_client_cost[c], abs=1e-9)
+        lt, rt = state_totals(live.timeline), state_totals(rep.timeline)
+        assert set(lt) == set(rt)
+        for k in lt:
+            assert rt[k] == pytest.approx(lt[k], abs=1e-9), k
+        assert rep.makespan_s == pytest.approx(live.makespan_s, abs=1e-9)
+        assert rep.rounds_completed == live.rounds_completed
+        assert rep.excluded_clients == live.excluded_clients
+        assert [list(p) for p in rep.per_round_participants] == \
+            live.per_round_participants
+
+    def test_replayed_cost_curve_rounds_and_dollars(self):
+        r = make_runner("fedcostaware")
+        live = r.run()
+        rep = replay_result(EventReplayer.loads(r.recorder.dumps()))
+        assert len(rep.cost_curve) == len(live.cost_curve)
+        for lrec, rrec in zip(live.cost_curve, rep.cost_curve):
+            assert lrec["client"] == rrec["client"]
+            assert lrec["round"] == rrec["round"]
+            assert rrec["cum_cost"] == pytest.approx(
+                lrec["cum_cost"], abs=1e-9)
+
+    def test_truncated_log_rejected_by_replay_result(self):
+        r = make_runner("spot")
+        r.run()
+        lines = r.recorder.dumps().splitlines()
+        truncated = "\n".join(lines[:-1])       # drop RunCompleted
+        with pytest.raises(ValueError, match="RunCompleted"):
+            replay_result(EventReplayer.loads(truncated))
+
+    def test_replay_consumers_price_book_free(self):
+        """Replay-mode accountant/timeline/curve never touch a price
+        book or clock — the acceptance gate for offline fig4/fig5."""
+        r = make_runner("fedcostaware")
+        live = r.run()
+        bus = EventBus()
+        acct = CostAccountant(bus)
+        tl = TimelineRecorder(bus)
+        curve = CostCurveRecorder(bus)
+        EventReplayer.loads(r.recorder.dumps()).replay(bus)
+        assert acct.total_cost() == pytest.approx(
+            live.total_cost, abs=1e-9)
+        assert state_totals(tl.segments).keys() == \
+            state_totals(live.timeline).keys()
+        assert len(curve.records) == len(live.cost_curve)

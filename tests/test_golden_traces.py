@@ -1,0 +1,250 @@
+"""Golden-trace regression tests for the event-log record/replay
+subsystem.
+
+Checked-in fixtures under tests/golden/ are full recorded event streams
+(2 clients x 3 rounds, pinned seed) for the three spot-market policies,
+plus the Fed-ISIC2019 FedCostAware row that backs the paper-claims
+tests. A fresh run must reproduce each golden log field-for-field
+(numeric fields to 1e-9) — any event-schema change, engine-ordering
+drift, or pricing change fails here loudly. Replaying a golden trace
+through a price-book-free `CostAccountant` must reproduce the pinned
+dollar totals, and replaying a fresh recording of the
+tests/test_engines.py config must land on that suite's pinned
+pre-refactor totals.
+
+Regenerate fixtures after an *intentional* schema/engine change with:
+
+    PYTHONPATH=src python tests/test_golden_traces.py --regenerate
+"""
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+from repro.cloud.accounting import CostAccountant
+from repro.common.config import CloudConfig, ClientProfile, FLRunConfig
+from repro.core.events import EventBus
+from repro.core.eventlog import SCHEMA_VERSION, EventReplayer
+from repro.fl.runner import FLCloudRunner
+from repro.fl.telemetry import replay_result, state_totals
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+CLOUD = CloudConfig(spot_rate_sigma=0.0)
+CLIENTS = (
+    ClientProfile("slow", mean_epoch_s=900, jitter=0.0, n_samples=2),
+    ClientProfile("fast", mean_epoch_s=150, jitter=0.0, n_samples=1),
+)
+POLICIES = ("fedcostaware", "spot", "fedcostaware_async")
+
+# Pinned replayed CostAccountant totals for the 2x3 golden configs
+# (printed by `--regenerate`; update together with the fixtures).
+GOLDEN_TOTALS = {
+    "fedcostaware": {
+        "total": 0.5328913363302961,
+        "per_client": {"slow": 0.30524109,
+                       "fast": 0.22765024633029604},
+    },
+    "spot": {
+        "total": 0.613665141330296,
+        "per_client": {"slow": 0.30524109,
+                       "fast": 0.3084240513302961},
+    },
+    "fedcostaware_async": {
+        "total": 0.0984565136697039,
+        "per_client": {"slow": 0.04763677616970391,
+                       "fast": 0.05081973749999999},
+    },
+}
+
+
+def make_runner(policy: str) -> FLCloudRunner:
+    cfg = FLRunConfig(dataset="golden", clients=CLIENTS, n_epochs=3,
+                      policy=policy, seed=0)
+    return FLCloudRunner(cfg, cloud_cfg=CLOUD, record=True)
+
+
+def make_fed_isic_runner() -> FLCloudRunner:
+    from benchmarks.table1 import ROWS
+    row = ROWS[0]
+    clients = tuple(
+        ClientProfile(f"client_{i}", mean_epoch_s=t, cold_multiplier=1.12,
+                      jitter=0.0, n_samples=int(t))
+        for i, t in enumerate(row.epoch_s))
+    cloud = CloudConfig(on_demand_rate=row.od_rate,
+                        spot_rate_mean=row.spot_rate / 0.98,
+                        spot_rate_sigma=0.0, spin_up_mean_s=row.spin_up_s,
+                        spin_up_sigma=0.0)
+    cfg = FLRunConfig(dataset=row.dataset, clients=clients,
+                      n_epochs=row.n_epochs, policy="fedcostaware", seed=0)
+    return FLCloudRunner(cfg, cloud_cfg=cloud, record=True)
+
+
+def trace_path(name: str) -> Path:
+    return GOLDEN_DIR / f"{name}.events.jsonl"
+
+
+FED_ISIC_TRACE = "fed_isic2019__fedcostaware"
+
+
+def load_golden(name: str):
+    lines = trace_path(name).read_text().splitlines()
+    header = json.loads(lines[0])
+    return header, [json.loads(ln) for ln in lines[1:]]
+
+
+# ---------------------------------------------------------------------------
+# Field-for-field comparison with numeric tolerance (float ops are
+# deterministic per platform but may differ in the last ulp across
+# libm builds).
+# ---------------------------------------------------------------------------
+def assert_json_equal(got, want, where="$"):
+    if isinstance(want, float) or isinstance(got, float):
+        assert isinstance(got, (int, float)) and \
+            isinstance(want, (int, float)), where
+        if math.isnan(want):
+            assert math.isnan(got), where
+        else:
+            assert got == pytest.approx(want, abs=1e-9, rel=1e-12), where
+    elif isinstance(want, dict):
+        assert isinstance(got, dict) and set(got) == set(want), where
+        for k in want:
+            assert_json_equal(got[k], want[k], f"{where}.{k}")
+    elif isinstance(want, list):
+        assert isinstance(got, list) and len(got) == len(want), \
+            f"{where}: {len(got)} != {len(want)} entries"
+        for i, (g, w) in enumerate(zip(got, want)):
+            assert_json_equal(g, w, f"{where}[{i}]")
+    else:
+        assert got == want, f"{where}: {got!r} != {want!r}"
+
+
+# ---------------------------------------------------------------------------
+# The regression oracle: fresh run == checked-in golden log.
+# ---------------------------------------------------------------------------
+class TestGoldenDrift:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_fresh_run_reproduces_golden_log(self, policy):
+        header, records = load_golden(f"golden__{policy}")
+        r = make_runner(policy)
+        r.run()
+        assert r.recorder.header["schema"] == header["schema"]
+        got = json.loads(r.recorder.dumps().splitlines()[0])
+        assert_json_equal(got, header, "$header")
+        assert len(r.recorder.records) == len(records), \
+            "event count drift — engine ordering or vocabulary changed"
+        for i, (g, w) in enumerate(zip(r.recorder.records, records)):
+            assert g["type"] == w["type"], \
+                f"event[{i}] type drift: {g['type']} != {w['type']}"
+            assert_json_equal(g, w, f"$event[{i}]({w['type']})")
+
+    def test_fed_isic_trace_reproduced(self):
+        header, records = load_golden(FED_ISIC_TRACE)
+        r = make_fed_isic_runner()
+        r.run()
+        assert len(r.recorder.records) == len(records)
+        for i, (g, w) in enumerate(zip(r.recorder.records, records)):
+            assert_json_equal(g, w, f"$event[{i}]({w['type']})")
+
+
+# ---------------------------------------------------------------------------
+# Replay consumers reproduce the live run from the golden bytes alone.
+# ---------------------------------------------------------------------------
+class TestGoldenReplay:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_replayed_totals_match_pinned(self, policy):
+        rep = replay_result(trace_path(f"golden__{policy}"))
+        want = GOLDEN_TOTALS[policy]
+        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
+        for c, v in want["per_client"].items():
+            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
+        assert rep.rounds_completed == 3
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_replay_matches_live_run(self, policy):
+        r = make_runner(policy)
+        live = r.run()
+        rep = replay_result(
+            EventReplayer.loads(r.recorder.dumps()))
+        assert rep.total_cost == pytest.approx(live.total_cost, abs=1e-9)
+        for c in live.per_client_cost:
+            assert rep.per_client_cost[c] == pytest.approx(
+                live.per_client_cost[c], abs=1e-9)
+        lt, rt = state_totals(live.timeline), state_totals(rep.timeline)
+        assert set(lt) == set(rt)
+        for k in lt:
+            assert rt[k] == pytest.approx(lt[k], abs=1e-9), k
+        assert rep.makespan_s == pytest.approx(live.makespan_s, abs=1e-9)
+        assert [list(p) for p in rep.per_round_participants] == \
+            live.per_round_participants
+
+    def test_replayed_sync_totals_match_test_engines_pins(self):
+        """The differential oracle closes the loop to the pre-refactor
+        pinned values: record a fresh run of the tests/test_engines.py
+        config, replay it, and land on the same dollars."""
+        from test_engines import CLIENTS as ECLIENTS
+        from test_engines import CLOUD as ECLOUD
+        from test_engines import GOLDEN_SYNC
+        for policy, want in GOLDEN_SYNC.items():
+            cfg = FLRunConfig(dataset="t", clients=ECLIENTS, n_epochs=8,
+                              policy=policy, seed=0)
+            r = FLCloudRunner(cfg, cloud_cfg=ECLOUD, record=True)
+            r.run()
+            rep = replay_result(EventReplayer.loads(r.recorder.dumps()))
+            assert rep.total_cost == pytest.approx(want, abs=1e-6), policy
+
+    def test_schema_version_enforced(self):
+        text = trace_path("golden__spot").read_text()
+        lines = text.splitlines()
+        header = json.loads(lines[0])
+        header["schema"] = SCHEMA_VERSION + 1
+        tampered = "\n".join([json.dumps(header)] + lines[1:])
+        with pytest.raises(ValueError, match="schema"):
+            EventReplayer.loads(tampered)
+
+    def test_replay_without_simulator(self):
+        """Replay never constructs a CloudSimulator / PriceBook: the
+        accountant runs price-book-free on the replay bus."""
+        bus = EventBus()
+        acct = CostAccountant(bus)          # no prices, no clock
+        EventReplayer.load(trace_path("golden__fedcostaware")).replay(bus)
+        want = GOLDEN_TOTALS["fedcostaware"]
+        assert acct.total_cost() == pytest.approx(want["total"], abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Fixture regeneration (documented in README).
+# ---------------------------------------------------------------------------
+def regenerate():
+    # run everything first, write fixtures only once all runs succeeded
+    # (a mid-way crash must not leave the goldens half-regenerated)
+    totals = {}
+    recorders = {}
+    for policy in POLICIES:
+        r = make_runner(policy)
+        res = r.run()
+        recorders[f"golden__{policy}"] = r.recorder
+        totals[policy] = {
+            "total": res.total_cost,
+            "per_client": dict(res.per_client_cost),
+        }
+    r = make_fed_isic_runner()
+    r.run()
+    recorders[FED_ISIC_TRACE] = r.recorder
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    for name, rec in recorders.items():
+        rec.dump(trace_path(name))
+    print("GOLDEN_TOTALS =", json.dumps(totals, indent=4))
+
+
+if __name__ == "__main__":
+    import sys
+    # make `PYTHONPATH=src python tests/test_golden_traces.py` work from
+    # the repo root regardless of PYTHONPATH: the fed-isic config lives
+    # in the top-level `benchmarks` package.
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    if "--regenerate" in sys.argv:
+        regenerate()
+    else:
+        print(__doc__)

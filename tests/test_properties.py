@@ -14,8 +14,14 @@ from hypothesis import given, settings, strategies as st
 from repro.common.config import CloudConfig, ClientProfile, FLRunConfig, \
     SchedulerConfig
 from repro.core.estimator import EMA
+from repro.core.events import (BillingTick, BudgetExhausted, ClientReady,
+                               ClientStateChanged, EventBus, InstanceReady,
+                               RoundCompleted, RoundStarted, RunCompleted)
+from repro.core.eventlog import (EventRecorder, EventReplayer, InstanceRef,
+                                 decode_event, encode_event)
 from repro.fl.algorithms import weighted_average
 from repro.fl.runner import FLCloudRunner
+from repro.fl.telemetry import replay_result, state_totals
 from repro.kernels.grad_quant.ref import quantize_blocks_ref, \
     dequantize_blocks_ref
 from repro.launch.hlo_analysis import _parse_op_line, _type_bytes
@@ -126,6 +132,102 @@ def test_parse_op_line_dot(m, n):
     assert parsed is not None
     name, type_str, opcode, rest = parsed
     assert opcode == "dot" and _type_bytes(type_str) == m * n * 4
+
+
+# ---------------------------------------------------------------------------
+# Event-log round-trip losslessness: any sequence of randomly generated
+# events survives publish -> record -> JSONL -> parse -> replay ->
+# re-record with identical encoded records.
+# ---------------------------------------------------------------------------
+_t = st.floats(0.0, 1e7, allow_nan=False, allow_infinity=False)
+_money = st.floats(0.0, 1e4, allow_nan=False, allow_infinity=False)
+_client = st.sampled_from(["a", "b", "c", "d"])
+_state = st.sampled_from(["spinup", "training", "idle", "savings", "done"])
+_participants = st.lists(_client, max_size=4, unique=True).map(tuple)
+_costs = st.dictionaries(_client, _money, max_size=4)
+
+_instance = st.builds(
+    InstanceRef,
+    iid=st.integers(1, 10_000), client=_client,
+    zone=st.sampled_from(["z0", "z1", "z2"]), on_demand=st.booleans(),
+    t_request=_t, t_ready=st.none() | _t, t_end=st.none() | _t,
+    state=st.sampled_from(["spinning_up", "running", "terminated",
+                           "preempted"]))
+
+_event = st.one_of(
+    st.builds(ClientStateChanged, t=_t, client=_client, state=_state),
+    st.builds(BudgetExhausted, t=_t, client=_client),
+    st.builds(RoundStarted, t=_t, round_idx=st.integers(0, 100),
+              participants=_participants),
+    st.builds(RoundCompleted, t=_t, round_idx=st.integers(0, 100),
+              participants=_participants, client_costs=_costs),
+    st.builds(RunCompleted, t=_t, makespan_s=_t, total_cost=_money,
+              client_costs=_costs, rounds_completed=st.integers(0, 100),
+              excluded_clients=_participants,
+              final_round_idx=st.integers(-1, 100)),
+    st.builds(InstanceReady, t=_t, instance=_instance),
+    st.builds(BillingTick, t=_t, instance=_instance, client=_client,
+              t0=_t, t1=_t, amount=_money),
+    st.builds(ClientReady, t=_t, client=_client, instance=_instance,
+              cold=st.booleans(),
+              resume_token=st.none() | st.fixed_dictionaries(
+                  {"round": st.integers(0, 100), "remaining": _money})),
+)
+
+
+@given(st.lists(_event, min_size=1, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_eventlog_jsonl_roundtrip_lossless(events):
+    bus = EventBus()
+    rec = EventRecorder(bus, meta={"dataset": "prop", "seed": 0})
+    for ev in events:
+        bus.publish(ev)
+    text = rec.dumps()
+    replayer = EventReplayer.loads(text)
+    assert replayer.header == rec.header
+    out_bus = EventBus()
+    rerec = EventRecorder(out_bus)
+    replayer.replay(out_bus)
+    assert rerec.records == rec.records
+    # a second serialize -> parse cycle is byte-stable
+    rerec.header = rec.header
+    assert rerec.dumps() == text
+
+
+@given(_event)
+@settings(max_examples=120, deadline=None)
+def test_encode_decode_single_event_identity(ev):
+    rec = encode_event(ev)
+    assert encode_event(decode_event(rec)) == rec
+
+
+# ---------------------------------------------------------------------------
+# Live vs replayed runs agree across random preemption seeds: cost
+# totals and per-(client, state) timeline sums within 1e-9.
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000), st.floats(0.0, 2.0),
+       st.sampled_from(["fedcostaware", "fedcostaware_async"]))
+@settings(max_examples=10, deadline=None)
+def test_live_vs_replayed_run_agree(seed, preempt_rate, policy):
+    clients = (
+        ClientProfile("slow", 800, jitter=0.0, n_samples=2),
+        ClientProfile("fast", 200, jitter=0.0, n_samples=1),
+    )
+    cloud = CloudConfig(spot_rate_sigma=0.0,
+                        preemption_rate_per_hr=preempt_rate)
+    cfg = FLRunConfig(dataset="prop", clients=clients, n_epochs=4,
+                      policy=policy, seed=seed)
+    runner = FLCloudRunner(cfg, cloud_cfg=cloud, record=True)
+    live = runner.run()
+    rep = replay_result(EventReplayer.loads(runner.recorder.dumps()))
+    assert abs(rep.total_cost - live.total_cost) < 1e-9
+    for c in live.per_client_cost:
+        assert abs(rep.per_client_cost[c] - live.per_client_cost[c]) < 1e-9
+    lt, rt = state_totals(live.timeline), state_totals(rep.timeline)
+    assert set(lt) == set(rt)
+    for k in lt:
+        assert abs(lt[k] - rt[k]) < 1e-9
+    assert abs(rep.makespan_s - live.makespan_s) < 1e-9
 
 
 def test_parse_op_line_tuple_type_with_comment():
