@@ -15,21 +15,29 @@ import argparse
 from typing import Optional
 
 from benchmarks.fig4_timeline import describe, header_of
-from benchmarks.table1 import ROWS, run_row
+from benchmarks.table1 import ROWS, run_row, trace_market
 from repro.core.eventlog import EventReplayer
 from repro.fl.telemetry import replay_result
 
 
-def run(replay: Optional[str] = None, record: Optional[str] = None):
+def run(replay: Optional[str] = None, record: Optional[str] = None,
+        price_trace: Optional[str] = None,
+        providers: tuple = ("aws",)):
     if replay is not None:
         replayer = EventReplayer.load(replay)
         res = replay_result(replayer)
         desc = describe(replayer.header)
     else:
         row = ROWS[0]
-        res = run_row(row, "fedcostaware", record_to=record)
-        desc = describe(header_of(row, "fedcostaware")) \
-            + " (paper: $7.1740)"
+        market = (trace_market(price_trace, providers, row.od_rate)
+                  if price_trace is not None else None)
+        res = run_row(row, "fedcostaware", record_to=record,
+                      market=market)
+        desc = describe(header_of(row, "fedcostaware"))
+        if price_trace is not None:
+            desc += f" (trace market: {','.join(providers)})"
+        else:
+            desc += " (paper: $7.1740)"
     # cost_curve: one record per (round end, client)
     rounds = sorted({r["round"] for r in res.cost_curve})
     clients = sorted({r["client"] for r in res.cost_curve})
@@ -47,9 +55,19 @@ def main(argv=None):
                            "(no simulation)")
     mode.add_argument("--record", metavar="EVENTS_JSONL", default=None,
                       help="record the fresh run's event log to this path")
+    ap.add_argument("--price-trace", metavar="DIR", default=None,
+                    help="price the fresh run off real spot-history "
+                         "traces (<provider>.csv per provider under DIR)")
+    ap.add_argument("--providers", metavar="NAMES", default="aws",
+                    help="comma-separated provider list for "
+                         "--price-trace (default: aws)")
     args = ap.parse_args(argv)
+    providers = tuple(p.strip() for p in args.providers.split(",")
+                      if p.strip())
     rounds, clients, table, res, desc = run(replay=args.replay,
-                                            record=args.record)
+                                            record=args.record,
+                                            price_trace=args.price_trace,
+                                            providers=providers)
     print(f"# {desc}")
     print("round," + ",".join(clients))
     for r in rounds:

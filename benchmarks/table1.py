@@ -21,8 +21,9 @@ import dataclasses
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple, Union
 
-from repro.common.config import CloudConfig, ClientProfile, FLRunConfig, \
-    SchedulerConfig
+from repro.common.config import (CloudConfig, ClientProfile, FLRunConfig,
+                                 MarketConfig, ProviderConfig,
+                                 SchedulerConfig)
 from repro.fl.runner import FLCloudRunner
 
 
@@ -63,8 +64,21 @@ ROWS = [
 POLICIES = ("fedcostaware", "fedcostaware_async", "spot", "on_demand")
 
 
+def trace_market(trace_dir: Union[str, Path], providers: Tuple[str, ...],
+                 od_rate: float) -> MarketConfig:
+    """Trace-driven multi-provider market: one `<provider>.csv` spot
+    history (AWS spot-price-history format) per provider under
+    `trace_dir`."""
+    return MarketConfig(providers=tuple(
+        ProviderConfig(name=p, on_demand_rate=od_rate,
+                       price_trace=str(Path(trace_dir) / f"{p}.csv"))
+        for p in providers))
+
+
 def run_row(row: Table1Row, policy: str, seed: int = 0,
-            record_to: Optional[Union[str, Path]] = None):
+            record_to: Optional[Union[str, Path]] = None,
+            market: Optional[MarketConfig] = None,
+            cross_provider: Optional[bool] = None):
     clients = tuple(
         ClientProfile(f"client_{i}", mean_epoch_s=t, cold_multiplier=1.12,
                       jitter=0.0, n_samples=int(t))
@@ -74,9 +88,10 @@ def run_row(row: Table1Row, policy: str, seed: int = 0,
     cloud = CloudConfig(on_demand_rate=row.od_rate,
                         spot_rate_mean=row.spot_rate / 0.98,
                         spot_rate_sigma=0.0, spin_up_mean_s=row.spin_up_s,
-                        spin_up_sigma=0.0)
+                        spin_up_sigma=0.0, market=market)
     cfg = FLRunConfig(dataset=row.dataset, clients=clients,
-                      n_epochs=row.n_epochs, policy=policy, seed=seed)
+                      n_epochs=row.n_epochs, policy=policy, seed=seed,
+                      cross_provider=cross_provider)
     return FLCloudRunner(cfg, cloud_cfg=cloud,
                          record_to=record_to).run()
 
@@ -88,17 +103,22 @@ def _trace_path(record_dir: Union[str, Path], dataset: str,
 
 
 def run(record_dir: Optional[Union[str, Path]] = None,
-        only_dataset: Optional[str] = None) -> List[dict]:
+        only_dataset: Optional[str] = None,
+        price_trace: Optional[Union[str, Path]] = None,
+        providers: Tuple[str, ...] = ("aws",)) -> List[dict]:
     out = []
     for row in ROWS:
         if only_dataset is not None and row.dataset != only_dataset:
             continue
+        market = (trace_market(price_trace, providers, row.od_rate)
+                  if price_trace is not None else None)
         od_cost = None
         for policy in POLICIES:
             rec_path = (_trace_path(record_dir, row.dataset, policy)
                         if record_dir is not None else None)
-            res = run_row(row, policy, record_to=rec_path)
-            target = row.target.get(policy)     # async has no paper column
+            res = run_row(row, policy, record_to=rec_path, market=market)
+            target = (row.target.get(policy)    # async has no paper column
+                      if price_trace is None else None)
             rec = {
                 "dataset": row.dataset, "n_clients": row.n_clients,
                 "n_epochs": row.n_epochs, "algorithm": policy,
@@ -133,13 +153,23 @@ def main(argv=None):
     ap.add_argument("--row", metavar="DATASET", default=None,
                     choices=[r.dataset for r in ROWS],
                     help="run a single Table-1 row (e.g. MNIST)")
+    ap.add_argument("--price-trace", metavar="DIR", default=None,
+                    help="price every run off real spot-history traces "
+                         "(<provider>.csv per provider under DIR) "
+                         "instead of the synthetic market")
+    ap.add_argument("--providers", metavar="NAMES", default="aws",
+                    help="comma-separated provider list for "
+                         "--price-trace (default: aws)")
     args = ap.parse_args(argv)
     print("dataset,algorithm,total_cost,paper_cost,rel_err,"
           "savings_vs_od_pct,paper_savings_pct")
     def fmt(v):
         return "" if v is None else v
 
-    for r in run(record_dir=args.record_dir, only_dataset=args.row):
+    providers = tuple(p.strip() for p in args.providers.split(",")
+                      if p.strip())
+    for r in run(record_dir=args.record_dir, only_dataset=args.row,
+                 price_trace=args.price_trace, providers=providers):
         print(f"{r['dataset']},{r['algorithm']},{r['total_cost']},"
               f"{fmt(r['paper_cost'])},{fmt(r['rel_err'])},"
               f"{fmt(r.get('savings_vs_od_pct'))},"

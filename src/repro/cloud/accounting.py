@@ -28,11 +28,11 @@ from typing import Callable, Dict, Optional, Set
 
 from repro.core.events import (BillingTick, EventBus, InstancePreempted,
                                InstanceReady, InstanceTerminated)
-from repro.cloud.pricing import PriceBook
+from repro.cloud.pricing import SpotMarket
 
 
 class CostAccountant:
-    def __init__(self, bus: EventBus, prices: Optional[PriceBook] = None,
+    def __init__(self, bus: EventBus, prices: Optional[SpotMarket] = None,
                  clock: Optional[Callable[[], float]] = None):
         self._prices = prices
         self._clock = clock
@@ -75,7 +75,8 @@ class CostAccountant:
         if t0 is None or self._prices is None:
             return 0.0          # closed, or replay mode (always closed)
         return self._prices.cost(inst.zone, t0, self._clock(),
-                                 inst.on_demand)
+                                 inst.on_demand,
+                                 provider=getattr(inst, "provider", None))
 
     def client_cost(self, client: str) -> float:
         return (self._closed[client]

@@ -1,28 +1,90 @@
-"""Spot / on-demand pricing across regions and availability zones.
+"""Provider-agnostic spot / on-demand market across providers, regions
+and availability zones.
 
 The paper (§III-A "Dynamic Resource Allocation") queries real-time spot
-prices across regions/zones and picks the cheapest. Here prices are
-simulated as per-zone piecewise-constant mean-reverting traces calibrated
-to the paper's observed g5.xlarge rates (on-demand $1.008/hr, spot
-≈ $0.3951/hr, Table I).
+prices across regions/zones and picks the cheapest. The pricing surface
+is layered so both synthetic and real market days plug in behind one
+interface:
+
+  PriceSource   — `price(t)` / `integral(t0, t1)` for one zone's spot
+                  price process. Two implementations:
+                    SyntheticOUSource  — the calibrated OU-like process
+                                         (paper Table I rates)
+                    TracePriceSource   — piecewise-constant real price
+                                         history (AWS spot-history
+                                         format, loaded by cloud.traces)
+                  Both answer integrals in O(1) off prefix sums — the
+                  billing hot path prices an open segment on every cost
+                  query.
+  Provider      — per-provider billing semantics: on-demand rate,
+                  billing granularity, min-billing floor, preemption
+                  notice.
+  Zone          — (provider, region, zone) placement target.
+  SpotMarket    — owns every provider's sources and arbitrates
+                  `cheapest_zone` across providers with deterministic
+                  tie-breaking (lowest price, then registration order).
+
+`PriceBook(cfg, seed)` survives as a constructor alias for the default
+single-provider synthetic market; it builds the exact same traces as the
+pre-redesign class, so seeded runs are bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import (Dict, Iterable, List, Optional, Protocol, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
-from repro.common.config import CloudConfig
+from repro.common.config import CloudConfig, MarketConfig, ProviderConfig
+
+DEFAULT_PROVIDER = "aws"
+
+
+@dataclasses.dataclass(frozen=True)
+class Provider:
+    """Billing semantics of one cloud provider (formerly CloudConfig
+    globals, now carried per provider so markets can mix them)."""
+    name: str
+    on_demand_rate: float              # $/hr
+    billing_granularity_s: float = 1.0  # round billed duration up to this
+    min_billing_s: float = 60.0         # spot min-billing floor (seconds)
+    preemption_notice_s: float = 0.0    # reclaim warning lead time
+
+    @classmethod
+    def from_cloud_config(cls, cfg: CloudConfig,
+                          name: str = DEFAULT_PROVIDER) -> "Provider":
+        return cls(name, on_demand_rate=cfg.on_demand_rate,
+                   billing_granularity_s=cfg.billing_granularity_s,
+                   min_billing_s=cfg.min_billing_s)
+
+    @classmethod
+    def from_provider_config(cls, pc: ProviderConfig) -> "Provider":
+        return cls(pc.name, on_demand_rate=pc.on_demand_rate,
+                   billing_granularity_s=pc.billing_granularity_s,
+                   min_billing_s=pc.min_billing_s,
+                   preemption_notice_s=pc.preemption_notice_s)
 
 
 @dataclasses.dataclass(frozen=True)
 class Zone:
-    name: str          # e.g. "us-east-1a"
-    region: str        # e.g. "us-east-1"
+    name: str                       # e.g. "us-east-1a"
+    region: str                     # e.g. "us-east-1"
+    provider: str = DEFAULT_PROVIDER
 
 
-class SpotPriceTrace:
+class PriceSource(Protocol):
+    """One zone's spot price process."""
+
+    def price(self, t: float) -> float: ...
+
+    def integral(self, t0: float, t1: float) -> float:
+        """Integral of price over [t0, t1] in $·s/hr (divide by 3600
+        for dollars)."""
+        ...
+
+
+class SyntheticOUSource:
     """Piecewise-constant mean-reverting price process for one zone.
 
     AWS publishes spot price updates at irregular intervals (minutes to
@@ -59,47 +121,251 @@ class SpotPriceTrace:
                      + self._prices[i] * (t - i * self._step))
 
     def integral(self, t0: float, t1: float) -> float:
-        """Integral of price over [t0, t1] in $·s/hr (divide by 3600 for $)."""
         if t1 <= t0:
             return 0.0
         return self._antiderivative(t1) - self._antiderivative(t0)
 
 
-class PriceBook:
-    """All zones' prices + on-demand rate; cheapest-zone queries."""
+# backwards-compatible name for the synthetic process
+SpotPriceTrace = SyntheticOUSource
 
-    def __init__(self, cfg: CloudConfig, seed: int = 0):
-        self.cfg = cfg
+
+class TracePriceSource:
+    """Piecewise-constant price history at *irregular* update times —
+    the shape of real `describe-spot-price-history` output.
+
+    `times` are seconds (ascending, relative to the market epoch) at
+    which the price changed; `prices[i]` holds on [times[i],
+    times[i+1]). Outside the recorded horizon the trace clamps: before
+    `times[0]` the first price applies, after the last update the final
+    price extends indefinitely (mirroring the synthetic source's clamped
+    lookup). Integrals are O(log n): prefix sums over the irregular
+    segments plus a binary search for the containing segment.
+    """
+
+    def __init__(self, times: Sequence[float], prices: Sequence[float]):
+        t = np.asarray(times, dtype=np.float64)
+        p = np.asarray(prices, dtype=np.float64)
+        if t.ndim != 1 or t.shape != p.shape or len(t) == 0:
+            raise ValueError("times/prices must be equal-length 1-D, "
+                             "non-empty")
+        if np.any(np.diff(t) < 0):
+            raise ValueError("times must be ascending")
+        if np.any(p < 0):
+            raise ValueError("negative price in trace")
+        self._times = t
+        self._prices = p
+        # _cum[i] = integral from times[0] up to times[i]
+        widths = np.diff(t)
+        self._cum = np.concatenate([[0.0],
+                                    np.cumsum(self._prices[:-1] * widths)])
+
+    def _index(self, t: float) -> int:
+        i = int(np.searchsorted(self._times, t, side="right")) - 1
+        return min(max(i, 0), len(self._times) - 1)
+
+    def price(self, t: float) -> float:
+        return float(self._prices[self._index(t)])
+
+    def _antiderivative(self, t: float) -> float:
+        """Integral over [times[0], t]; clamped below times[0]."""
+        if t <= self._times[0]:
+            # pre-horizon: first price extends backwards
+            return float(self._prices[0] * (t - self._times[0]))
+        i = self._index(t)
+        return float(self._cum[i]
+                     + self._prices[i] * (t - self._times[i]))
+
+    def integral(self, t0: float, t1: float) -> float:
+        if t1 <= t0:
+            return 0.0
+        return self._antiderivative(t1) - self._antiderivative(t0)
+
+    @property
+    def horizon(self) -> Tuple[float, float]:
+        return float(self._times[0]), float(self._times[-1])
+
+
+# ---------------------------------------------------------------------------
+# The market facade.
+# ---------------------------------------------------------------------------
+_REGIONS = ("us-east-1", "us-east-2", "us-west-2", "eu-west-1")
+
+
+class SpotMarket:
+    """All providers' zones, prices and billing semantics; cross-provider
+    cheapest-zone arbitration.
+
+    Zone registration order is the arbitration tie-break: `cheapest_zone`
+    scans zones in registration order and keeps the strictly cheapest,
+    so equal prices resolve to the first-registered zone (provider
+    config order, then zone index). That rule is deterministic across
+    runs and preserves the pre-redesign single-provider behavior
+    exactly.
+    """
+
+    def __init__(self, providers: Optional[Iterable[Provider]] = None):
+        self.providers: Dict[str, Provider] = {}
         self.zones: List[Zone] = []
-        self._traces: Dict[str, SpotPriceTrace] = {}
-        regions = ("us-east-1", "us-east-2", "us-west-2", "eu-west-1")
-        for i in range(cfg.n_zones):
+        self._sources: Dict[Tuple[str, str], PriceSource] = {}
+        self._zone_owner: Dict[str, str] = {}   # zone name -> first owner
+        for p in providers or ():
+            self.add_provider(p)
+
+    # ------------------------------------------------------------------
+    # Construction.
+    # ------------------------------------------------------------------
+    def add_provider(self, provider: Provider) -> Provider:
+        if provider.name in self.providers:
+            raise ValueError(f"provider {provider.name!r} already "
+                             f"registered")
+        self.providers[provider.name] = provider
+        return provider
+
+    def add_zone(self, zone: Zone, source: PriceSource) -> Zone:
+        if zone.provider not in self.providers:
+            raise ValueError(f"unknown provider {zone.provider!r} for "
+                             f"zone {zone.name!r}")
+        key = (zone.provider, zone.name)
+        if key in self._sources:
+            raise ValueError(f"zone {key} already registered")
+        self.zones.append(zone)
+        self._sources[key] = source
+        self._zone_owner.setdefault(zone.name, zone.provider)
+        return zone
+
+    @property
+    def default_provider(self) -> str:
+        return next(iter(self.providers))
+
+    @classmethod
+    def synthetic(cls, cfg: CloudConfig, seed: int = 0) -> "SpotMarket":
+        """The default single-provider market: bit-identical traces to
+        the pre-redesign `PriceBook(cfg, seed)`."""
+        m = cls([Provider.from_cloud_config(cfg)])
+        m._add_synthetic_zones(m.providers[DEFAULT_PROVIDER],
+                               cfg.spot_rate_mean, cfg.spot_rate_sigma,
+                               cfg.on_demand_rate, cfg.n_zones,
+                               _REGIONS, seed)
+        return m
+
+    def _add_synthetic_zones(self, provider: Provider, mean: float,
+                             sigma: float, on_demand: float, n_zones: int,
+                             regions: Sequence[str], seed: int):
+        for i in range(n_zones):
             region = regions[i % len(regions)]
-            z = Zone(f"{region}{chr(ord('a') + i // len(regions))}", region)
-            self.zones.append(z)
+            z = Zone(f"{region}{chr(ord('a') + i // len(regions))}",
+                     region, provider.name)
             # zone-specific mean wiggle so zones genuinely differ
-            mean = cfg.spot_rate_mean * (1.0 + 0.02 * ((i % 3) - 1))
-            self._traces[z.name] = SpotPriceTrace(
-                mean, cfg.spot_rate_sigma, cfg.on_demand_rate, seed=seed + i)
+            zmean = mean * (1.0 + 0.02 * ((i % 3) - 1))
+            self.add_zone(z, SyntheticOUSource(zmean, sigma, on_demand,
+                                               seed=seed + i))
 
-    def spot_price(self, zone: str, t: float) -> float:
-        return self._traces[zone].price(t)
+    @classmethod
+    def from_market_config(cls, mcfg: MarketConfig,
+                           seed: int = 0) -> "SpotMarket":
+        """Build a (possibly multi-provider) market. Providers with a
+        `price_trace` path get trace-driven zones (cloud.traces); the
+        rest synthesize OU zones off a provider-indexed seed."""
+        from repro.cloud.traces import build_zone_sources, parse_price_file
+        m = cls()
+        # parse each history file once; every trace-driven provider then
+        # shares one market epoch so their histories stay aligned on the
+        # simulated clock
+        parsed = {pc.name: parse_price_file(pc.price_trace)
+                  for pc in mcfg.providers if pc.price_trace is not None}
+        epoch = (min(r.timestamp for recs in parsed.values()
+                     for r in recs) if parsed else None)
+        for pi, pc in enumerate(mcfg.providers):
+            prov = m.add_provider(Provider.from_provider_config(pc))
+            if pc.price_trace is not None:
+                for zone, source in build_zone_sources(
+                        parsed[pc.name], provider=pc.name, epoch=epoch):
+                    m.add_zone(zone, source)
+            else:
+                m._add_synthetic_zones(
+                    prov, pc.spot_rate_mean, pc.spot_rate_sigma,
+                    pc.on_demand_rate, pc.n_zones, pc.regions,
+                    seed + 1000 * pi)
+        return m
 
-    def on_demand_price(self, zone: str, t: float) -> float:
-        return self.cfg.on_demand_rate
+    @classmethod
+    def for_cloud_config(cls, cfg: CloudConfig,
+                         seed: int = 0) -> "SpotMarket":
+        """The market a `CloudConfig` describes: its explicit
+        `MarketConfig` when set, else the legacy scalar fields as a
+        single synthetic provider."""
+        if cfg.market is not None:
+            return cls.from_market_config(cfg.market, seed=seed)
+        return cls.synthetic(cfg, seed=seed)
 
-    def price(self, zone: str, t: float, on_demand: bool) -> float:
-        return (self.on_demand_price(zone, t) if on_demand
-                else self.spot_price(zone, t))
+    # ------------------------------------------------------------------
+    # Lookups.
+    # ------------------------------------------------------------------
+    def provider_of(self, name: Optional[str]) -> Provider:
+        return self.providers[name or self.default_provider]
+
+    def resolve_provider(self, zone: Optional[str] = None,
+                         provider: Optional[str] = None) -> str:
+        """Which provider a lookup means: the explicit `provider` when
+        given, else the (first-registered) owner of `zone`, else the
+        default provider — so a pinned zone name alone is enough to
+        reach the right provider's prices and billing rules."""
+        if provider is not None:
+            return provider
+        if zone is not None and zone in self._zone_owner:
+            return self._zone_owner[zone]
+        return self.default_provider
+
+    def source(self, zone: str,
+               provider: Optional[str] = None) -> PriceSource:
+        return self._sources[(self.resolve_provider(zone, provider),
+                              zone)]
+
+    def spot_price(self, zone: str, t: float,
+                   provider: Optional[str] = None) -> float:
+        return self.source(zone, provider).price(t)
+
+    def on_demand_price(self, zone: str, t: float,
+                        provider: Optional[str] = None) -> float:
+        return self.provider_of(
+            self.resolve_provider(zone, provider)).on_demand_rate
+
+    def price(self, zone: str, t: float, on_demand: bool,
+              provider: Optional[str] = None) -> float:
+        return (self.on_demand_price(zone, t, provider) if on_demand
+                else self.spot_price(zone, t, provider))
 
     def cheapest_zone(self, t: float,
-                      allowed: Optional[List[str]] = None) -> Tuple[str, float]:
-        names = allowed or [z.name for z in self.zones]
-        best = min(names, key=lambda z: self.spot_price(z, t))
-        return best, self.spot_price(best, t)
+                      allowed: Optional[List[str]] = None,
+                      providers: Optional[Sequence[str]] = None,
+                      ) -> Tuple[Zone, float]:
+        """Cheapest spot placement at `t` across `providers` (default:
+        every registered provider), optionally restricted to `allowed`
+        zone names. Ties break to the first-registered zone."""
+        best: Optional[Zone] = None
+        best_p = float("inf")
+        for z in self.zones:
+            if providers is not None and z.provider not in providers:
+                continue
+            if allowed is not None and z.name not in allowed:
+                continue
+            p = self.spot_price(z.name, t, z.provider)
+            if p < best_p:                  # strict: first-lowest wins
+                best, best_p = z, p
+        if best is None:
+            raise ValueError("no zone matches the placement constraints")
+        return best, best_p
 
-    def cost(self, zone: str, t0: float, t1: float, on_demand: bool) -> float:
+    def cost(self, zone: str, t0: float, t1: float, on_demand: bool,
+             provider: Optional[str] = None) -> float:
         """Dollars accrued over [t0, t1] (per-second billing)."""
         if on_demand:
-            return self.cfg.on_demand_rate * max(t1 - t0, 0.0) / 3600.0
-        return self._traces[zone].integral(t0, t1) / 3600.0
+            rate = self.on_demand_price(zone, t0, provider)
+            return rate * max(t1 - t0, 0.0) / 3600.0
+        return self.source(zone, provider).integral(t0, t1) / 3600.0
+
+
+def PriceBook(cfg: CloudConfig, seed: int = 0) -> SpotMarket:
+    """Pre-redesign constructor: the single-provider synthetic market."""
+    return SpotMarket.synthetic(cfg, seed=seed)

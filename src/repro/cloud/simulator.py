@@ -1,11 +1,17 @@
 """Discrete-event cloud simulator: instance lifecycles, spin-up delays,
-Poisson preemption, and per-second billing against the PriceBook.
+Poisson preemption, and per-second billing against the SpotMarket.
 
 This is the stand-in for AWS EC2 + the custom Ray node launcher in the
 paper. The FedCostAware scheduler interacts with it through exactly the
 operations the paper's scheduler uses: request instance (in a chosen
-zone), terminate instance, observe ready/preempt events, read accrued
-cost.
+zone, on a chosen provider), terminate instance, observe ready/preempt
+events, read accrued cost.
+
+Billing semantics are per provider (`repro.cloud.pricing.Provider`):
+the min-billing floor, billing granularity and preemption-notice lead
+time all come from the provider descriptor of the zone an instance runs
+in, so a multi-provider market bills each instance by its own
+provider's rules.
 
 Lifecycle notifications are published as typed events on an `EventBus`
 (`repro.core.events`) — the simulator takes no per-request callbacks, so
@@ -18,15 +24,15 @@ import dataclasses
 import heapq
 import itertools
 import math
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.common.config import CloudConfig
-from repro.cloud.pricing import PriceBook
+from repro.cloud.pricing import DEFAULT_PROVIDER, SpotMarket, Zone
 from repro.core.events import (BillingTick, EventBus, InstancePreempted,
-                               InstanceReady, InstanceRequested,
-                               InstanceTerminated)
+                               InstancePreemptionWarning, InstanceReady,
+                               InstanceRequested, InstanceTerminated)
 
 # Instance states
 REQUESTED, SPINNING_UP, RUNNING, TERMINATED, PREEMPTED = (
@@ -45,6 +51,7 @@ class Instance:
     state: str = SPINNING_UP
     cost: float = 0.0          # finalized at termination/preemption
     _billing_from: Optional[float] = None
+    provider: str = DEFAULT_PROVIDER
 
 
 class CloudSimulator:
@@ -55,10 +62,11 @@ class CloudSimulator:
     transitions are published on `self.bus`.
     """
 
-    def __init__(self, cfg: CloudConfig, prices: Optional[PriceBook] = None,
+    def __init__(self, cfg: CloudConfig,
+                 market: Optional[SpotMarket] = None,
                  seed: int = 0, bus: Optional[EventBus] = None):
         self.cfg = cfg
-        self.prices = prices or PriceBook(cfg, seed=seed)
+        self.market = market or SpotMarket.for_cloud_config(cfg, seed=seed)
         self.bus = bus or EventBus()
         self.now = 0.0
         self._heap: List = []
@@ -67,6 +75,15 @@ class CloudSimulator:
         self._instances: Dict[int, Instance] = {}
         self._iid = itertools.count(1)
         self.event_log: List[dict] = []
+
+    @property
+    def prices(self) -> SpotMarket:
+        """Pre-redesign name for the market facade."""
+        return self.market
+
+    def provider_of(self, inst: Instance):
+        """Billing semantics of the instance's provider."""
+        return self.market.provider_of(inst.provider)
 
     # ------------------------------------------------------------------
     # Event engine.
@@ -94,11 +111,20 @@ class CloudSimulator:
         mu = math.log(self.cfg.spin_up_mean_s)
         return float(np.exp(mu + self._rng.randn() * self.cfg.spin_up_sigma))
 
-    def request_instance(self, client: str, zone: Optional[str] = None,
-                         on_demand: bool = False) -> Instance:
+    def request_instance(self, client: str,
+                         zone: Optional[Union[str, Zone]] = None,
+                         on_demand: bool = False,
+                         provider: Optional[str] = None) -> Instance:
         if zone is None:
-            zone, _ = self.prices.cheapest_zone(self.now)
-        inst = Instance(next(self._iid), client, zone, on_demand, self.now)
+            z, _ = self.market.cheapest_zone(self.now)
+            zone, provider = z.name, z.provider
+        elif isinstance(zone, Zone):
+            zone, provider = zone.name, zone.provider
+        # a bare pinned zone name binds to its owning provider (first
+        # registered), not blindly to the default provider
+        inst = Instance(next(self._iid), client, zone, on_demand, self.now,
+                        provider=self.market.resolve_provider(zone,
+                                                              provider))
         self._instances[inst.iid] = inst
         spin = self.sample_spin_up()
         self._log("request", inst)
@@ -121,6 +147,18 @@ class CloudSimulator:
     def _schedule_preemption(self, inst: Instance):
         rate = self.cfg.preemption_rate_per_hr / 3600.0
         delay = float(self._rng.exponential(1.0 / rate))
+        notice = self.provider_of(inst).preemption_notice_s
+        if notice > 0.0:
+            # the provider's reclaim warning (AWS: 2 min) precedes the
+            # actual reclaim; consumers may checkpoint / drain on it
+            reclaim_at = self.now + delay
+
+            def warn():
+                if inst.state == RUNNING:
+                    self.bus.publish(InstancePreemptionWarning(
+                        self.now, inst, reclaim_at))
+
+            self.schedule_in(max(delay - notice, 0.0), warn)
         self.schedule_in(delay, lambda: self.preempt(inst))
 
     def preempt(self, inst: Instance) -> bool:
@@ -156,10 +194,17 @@ class CloudSimulator:
         if t0 is None:
             return
         t1 = self.now
-        billed = max(t1 - t0, self.cfg.min_billing_s if not inst.on_demand
+        prov = self.provider_of(inst)
+        billed = max(t1 - t0, prov.min_billing_s if not inst.on_demand
                      else 0.0)
-        amount = self.prices.cost(inst.zone, t0, t0 + billed,
-                                  inst.on_demand)
+        # coarse-granularity providers round the billed duration up to
+        # whole billing units; per-second (or finer) billing is treated
+        # as continuous, matching the pre-redesign behavior
+        g = prov.billing_granularity_s
+        if g > 1.0:
+            billed = math.ceil(billed / g - 1e-12) * g
+        amount = self.market.cost(inst.zone, t0, t0 + billed,
+                                  inst.on_demand, provider=inst.provider)
         inst.cost += amount
         inst._billing_from = None
         self.bus.publish(BillingTick(self.now, inst, inst.client,
@@ -169,8 +214,8 @@ class CloudSimulator:
         """Cost so far including the open billing segment."""
         c = inst.cost
         if inst._billing_from is not None:
-            c += self.prices.cost(inst.zone, inst._billing_from, self.now,
-                                  inst.on_demand)
+            c += self.market.cost(inst.zone, inst._billing_from, self.now,
+                                  inst.on_demand, provider=inst.provider)
         return c
 
     def client_cost(self, client: str) -> float:
@@ -192,5 +237,5 @@ class CloudSimulator:
         self.event_log.append({
             "t": self.now, "kind": kind, "client": inst.client,
             "iid": inst.iid, "zone": inst.zone,
-            "on_demand": inst.on_demand,
+            "provider": inst.provider, "on_demand": inst.on_demand,
         })

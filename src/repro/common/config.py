@@ -216,7 +216,35 @@ class ClientProfile:
     budget: float = float("inf")   # USD
     n_samples: int = 1             # FedAvg weight
     zone: Optional[str] = None     # pinned zone, else cheapest
+    provider: Optional[str] = None  # provider of the pinned zone
     join_round: int = 0            # elastic scaling: round the client joins
+
+
+@dataclasses.dataclass(frozen=True)
+class ProviderConfig:
+    """One provider's market + billing parameters inside a
+    `MarketConfig`. `price_trace` switches the provider's zones from the
+    synthetic OU process to real recorded spot history (a CSV/JSONL file
+    in AWS spot-price-history format, see `repro.cloud.traces`)."""
+    name: str = "aws"
+    on_demand_rate: float = 1.008
+    spot_rate_mean: float = 0.3951
+    spot_rate_sigma: float = 0.004
+    n_zones: int = 4
+    regions: Tuple[str, ...] = ("us-east-1", "us-east-2", "us-west-2",
+                                "eu-west-1")
+    billing_granularity_s: float = 1.0
+    min_billing_s: float = 60.0
+    preemption_notice_s: float = 0.0
+    price_trace: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MarketConfig:
+    """The spot market a run executes against: one or more providers,
+    each synthetic or trace-driven. Provider order is placement
+    tie-break order (see `SpotMarket.cheapest_zone`)."""
+    providers: Tuple[ProviderConfig, ...] = (ProviderConfig(),)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +258,10 @@ class CloudConfig:
     preemption_rate_per_hr: float = 0.0  # paper observed none; configurable
     billing_granularity_s: float = 1.0   # per-second billing
     min_billing_s: float = 60.0          # AWS bills min 60s for spot
+    # explicit multi-provider / trace-driven market; None keeps the
+    # legacy single-provider synthetic market built from the scalar
+    # fields above (bit-identical to the pre-SpotMarket behavior)
+    market: Optional[MarketConfig] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,4 +289,8 @@ class FLRunConfig:
     # results arrive; None -> n_clients - 1 (wait for all but the
     # slowest). Ignored by the synchronous engine.
     buffer_k: Optional[int] = None
+    # None -> the policy's own cross_provider default; True/False
+    # overrides whether cheapest-zone placement may arbitrate across
+    # every provider in the market or stays on the default provider
+    cross_provider: Optional[bool] = None
     seed: int = 0

@@ -31,7 +31,11 @@ from typing import Any, Dict, List, Optional, Union
 
 from repro.core.events import EVENT_TYPES, Event, EventBus
 
-SCHEMA_VERSION = 1
+# v2: instance snapshots carry the provider of the zone they run in
+# (multi-cloud SpotMarket); v1 logs predate the field and decode with
+# the single-provider default below (see SUPPORTED_SCHEMAS).
+SCHEMA_VERSION = 2
+SUPPORTED_SCHEMAS = (1, 2)
 
 _SCALARS = (bool, int, float, str)
 
@@ -42,6 +46,9 @@ class InstanceRef:
     of its scalar fields at event time. Replayed billing segments are
     always already closed, hence the class-level `_billing_from` — the
     accountant's open-segment pricing sees `None` and charges nothing.
+
+    `provider` defaults to the single provider every v1 log implicitly
+    ran on, so v1 snapshots (no provider key) decode losslessly.
     """
     iid: int
     client: str
@@ -51,6 +58,7 @@ class InstanceRef:
     t_ready: Optional[float] = None
     t_end: Optional[float] = None
     state: str = "spinning_up"
+    provider: str = "aws"
 
     _billing_from = None        # class attr on purpose: never a field
 
@@ -155,10 +163,10 @@ class EventReplayer:
         if not lines:
             raise ValueError("empty event log")
         header = json.loads(lines[0])
-        if header.get("schema") != SCHEMA_VERSION:
+        if header.get("schema") not in SUPPORTED_SCHEMAS:
             raise ValueError(
-                f"event log schema {header.get('schema')!r} != "
-                f"supported {SCHEMA_VERSION}")
+                f"event log schema {header.get('schema')!r} not in "
+                f"supported {SUPPORTED_SCHEMAS}")
         events = [decode_event(json.loads(ln)) for ln in lines[1:]]
         return cls(header, events)
 

@@ -54,6 +54,16 @@ class InstanceReady(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class InstancePreemptionWarning(Event):
+    """Provider reclaim notice (e.g. AWS's 2-minute warning): the
+    instance will be preempted at `reclaim_at` unless terminated first.
+    Only emitted when the instance's provider has a non-zero
+    `preemption_notice_s`."""
+    instance: Any
+    reclaim_at: float
+
+
+@dataclasses.dataclass(frozen=True)
 class InstancePreempted(Event):
     """Spot market reclaimed a RUNNING instance (billing already closed)."""
     instance: Any
@@ -172,9 +182,9 @@ class RunCompleted(Event):
 # event class that can appear on a recorded bus must be listed.
 EVENT_TYPES: Dict[str, Type[Event]] = {
     cls.__name__: cls for cls in (
-        InstanceRequested, InstanceReady, InstancePreempted,
-        InstanceTerminated, BillingTick, ClientReady, ClientLost,
-        RoundStarted, RoundCompleted, ClientStateChanged,
+        InstanceRequested, InstanceReady, InstancePreemptionWarning,
+        InstancePreempted, InstanceTerminated, BillingTick, ClientReady,
+        ClientLost, RoundStarted, RoundCompleted, ClientStateChanged,
         BudgetExhausted, RunCompleted,
     )
 }

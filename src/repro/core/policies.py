@@ -38,6 +38,12 @@ class Policy:
     enforce_budgets: bool
     pick_cheapest_zone: bool
     engine: str = "sync"         # RoundEngine registry key
+    # whether cheapest-zone placement arbitrates across *every* provider
+    # in the SpotMarket (Multi-FedLS-style) or stays on the market's
+    # default provider. Moot on single-provider markets, so the default
+    # preserves all existing behavior; `FLRunConfig.cross_provider`
+    # overrides it per run.
+    cross_provider: bool = True
 
 
 POLICIES = {

@@ -49,14 +49,20 @@ class ClusterManager:
     # Requests / termination.
     # ------------------------------------------------------------------
     def request(self, client: str, resume_token: Any = None) -> Instance:
-        """Request a fresh instance for `client` in its pinned zone, or
-        the currently-cheapest zone under cheapest-zone policies."""
+        """Request a fresh instance for `client` in its pinned
+        (provider, zone), or the currently-cheapest zone under
+        cheapest-zone policies — arbitrated across every provider in
+        the market when the policy allows cross-provider placement,
+        else only on the market's default provider."""
         prof = self.profiles[client]
-        zone = prof.zone
+        zone, provider = prof.zone, prof.provider
         if zone is None and self.policy.pick_cheapest_zone:
-            zone, _ = self.sim.prices.cheapest_zone(self.sim.now)
+            z, _ = self.sim.market.cheapest_zone(
+                self.sim.now, providers=self._placement_providers())
+            zone, provider = z.name, z.provider
         inst = self.sim.request_instance(client, zone=zone,
-                                         on_demand=self.policy.on_demand)
+                                         on_demand=self.policy.on_demand,
+                                         provider=provider)
         self.instances[client] = inst
         self._fresh[inst.iid] = True
         if resume_token is not None:
@@ -64,6 +70,13 @@ class ClusterManager:
         self.sim.bus.publish(
             ClientStateChanged(self.sim.now, client, "spinup"))
         return inst
+
+    def _placement_providers(self) -> Optional[list]:
+        """None (all providers) under cross-provider policies, else the
+        market's default provider only."""
+        if self.policy.cross_provider:
+            return None
+        return [self.sim.market.default_provider]
 
     def terminate(self, client: str) -> Optional[Instance]:
         inst = self.instances.get(client)

@@ -6,8 +6,11 @@ one client), then immediately opens the next round. Clients never wait
 at a barrier — each one is re-dispatched on the freshest global model
 the moment its previous epoch finishes, and a straggler's in-flight
 result simply rolls into whichever round's buffer is open when it lands
-(FedBuff, arXiv:2106.06639; staleness weighting is left to the
-aggregation hooks).
+(FedBuff, arXiv:2106.06639). Each buffered result is tagged with the
+round it was dispatched in; at aggregation the engine reports
+`staleness = aggregating_round - dispatch_round` per participant to
+`TrainerHooks.aggregate`, and the JAX hook discounts stale updates by
+the FedBuff weight 1/sqrt(1+staleness).
 
 Cost behavior: instances are never idle-at-the-barrier, so there is
 nothing for Listing-1 terminate/pre-warm decisions to reclaim — the
@@ -34,6 +37,8 @@ class AsyncBufferedEngine(BaseEngine):
         k = ctx.run_cfg.buffer_k
         self.buffer_k = max(1, min(k if k is not None else n - 1, n))
         self._buffer: List[str] = []       # results awaiting aggregation
+        self._buffer_round: Dict[str, int] = {}  # client -> dispatch round
+        self._dispatch_round: Dict[str, int] = {}
         self._active: List[str] = []       # participating clients, ordered
         self._task: Dict[str, int] = {}    # client -> in-flight task iid
         self._train_start: Dict[str, float] = {}
@@ -76,6 +81,10 @@ class AsyncBufferedEngine(BaseEngine):
             else self._sample_duration(c, cold)
         self._train_start[c] = self.sim.now
         self._train_duration[c] = dur
+        # checkpoint resumes keep the original dispatch round: the
+        # update is still based on that round's global model
+        if duration is None:
+            self._dispatch_round[c] = self._round_idx
         self._mark(c, "training")
         iid = self.cluster.instance_of(c).iid
         self._task[c] = iid
@@ -112,6 +121,8 @@ class AsyncBufferedEngine(BaseEngine):
         if self.hooks:
             self.hooks.run_local(c, self._round_idx)
         self._buffer.append(c)
+        self._buffer_round[c] = self._dispatch_round.get(
+            c, self._round_idx)
         self._mark(c, "idle")
         # exclusions may shrink the pool below buffer_k; clamp so the
         # run can still make progress (else it would spin forever)
@@ -128,8 +139,17 @@ class AsyncBufferedEngine(BaseEngine):
         r = self._round_idx
         participants = list(self._buffer)
         self._buffer.clear()
-        if self.hooks:
-            self.hooks.aggregate(participants, r)
+        # FedBuff staleness: rounds elapsed since each buffered result's
+        # dispatch (a straggler dispatched in round r-k lands with
+        # staleness k; the hook discounts it by 1/sqrt(1+k)). A fast
+        # client can appear in `participants` twice per aggregation;
+        # hooks keyed on client (JaxTrainerHooks) then see only its
+        # latest update, and this dict matches that update's dispatch
+        # round — the surviving entry, not the overwritten one.
+        staleness = {c: max(r - self._buffer_round.get(c, r), 0)
+                     for c in participants}
+        self._buffer_round.clear()
+        self._call_aggregate(participants, r, staleness)
         self.per_round_participants.append(participants)
         snap = self._cost_snapshot()
         self._record_costs(snap)

@@ -17,6 +17,7 @@ Contract:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 from typing import Dict, List, Optional
 
@@ -111,18 +112,40 @@ class BaseEngine:
         preserved = math.floor(elapsed / ck) * ck
         return max(train_duration - preserved, 1.0)
 
+    def _call_aggregate(self, participants: List[str], round_idx: int,
+                        staleness: Optional[Dict[str, int]] = None):
+        """Invoke `hooks.aggregate`, forwarding per-client staleness to
+        hooks that accept it (legacy 2-argument overrides still work)."""
+        if self.hooks is None:
+            return
+        try:
+            params = inspect.signature(self.hooks.aggregate).parameters
+        except (TypeError, ValueError):  # builtins / C callables
+            params = {}
+        accepts = ("staleness" in params
+                   or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                          for p in params.values()))
+        if accepts:
+            self.hooks.aggregate(participants, round_idx,
+                                 staleness=staleness)
+        else:
+            self.hooks.aggregate(participants, round_idx)
+
     def _sync_budgets(self):
         for c in self.profiles:
             self.scheduler.ledger.sync_spend(
                 c, self.accountant.client_cost(c))
 
     def _spot_price_of(self, c: str) -> float:
-        zone = self.profiles[c].zone
-        if zone is None:
-            _, p = self.sim.prices.cheapest_zone(self.sim.now)
+        prof = self.profiles[c]
+        if prof.zone is None:
+            _, p = self.sim.market.cheapest_zone(
+                self.sim.now,
+                providers=self.cluster._placement_providers())
             return p
-        return self.sim.prices.price(zone, self.sim.now,
-                                     self.policy.on_demand)
+        return self.sim.market.price(prof.zone, self.sim.now,
+                                     self.policy.on_demand,
+                                     provider=prof.provider)
 
     # ------------------------------------------------------------------
     # Telemetry publication. Engines never write to the timeline or the

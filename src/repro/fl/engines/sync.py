@@ -203,8 +203,8 @@ class SyncEngine(BaseEngine):
 
     # ------------------------------------------------------------------
     def _end_round(self, r: int):
-        if self.hooks:
-            self.hooks.aggregate(list(self._participants), r)
+        # barrier semantics: every update aggregated here is fresh
+        self._call_aggregate(list(self._participants), r)
         snap = self._cost_snapshot()
         self._record_costs(snap)
         self._publish_round_completed(r, self._participants, snap)

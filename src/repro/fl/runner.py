@@ -34,6 +34,7 @@ simulation.
 """
 from __future__ import annotations
 
+import dataclasses
 from pathlib import Path
 from typing import Optional, Union
 
@@ -65,6 +66,9 @@ class FLCloudRunner:
         self.cloud_cfg = cloud_cfg or CloudConfig()
         self.sched_cfg = sched_cfg or SchedulerConfig()
         self.policy: Policy = get_policy(run_cfg.policy)
+        if run_cfg.cross_provider is not None:
+            self.policy = dataclasses.replace(
+                self.policy, cross_provider=run_cfg.cross_provider)
         seed = run_cfg.seed if seed is None else seed
         self.record_to = record_to
 
@@ -84,7 +88,7 @@ class FLCloudRunner:
                 "seed": seed, "n_epochs": run_cfg.n_epochs,
                 "clients": [c.name for c in run_cfg.clients]})
         self.sim = CloudSimulator(self.cloud_cfg, seed=seed, bus=self.bus)
-        self.accountant = CostAccountant(self.bus, self.sim.prices,
+        self.accountant = CostAccountant(self.bus, self.sim.market,
                                          clock=lambda: self.sim.now)
         self.scheduler = make_scheduler(
             self.policy, self.sched_cfg, self.cloud_cfg.spin_up_mean_s)

@@ -4,6 +4,7 @@ trained global model while the simulator produces the dollar costs).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -63,9 +64,19 @@ class JaxTrainerHooks(TrainerHooks):
         self._weights[client] = metrics.n_samples
         self._losses[client] = metrics.loss
 
-    def aggregate(self, participants: List[str], round_idx: int) -> None:
+    @staticmethod
+    def staleness_discount(staleness: int) -> float:
+        """FedBuff (arXiv:2106.06639) polynomial staleness weight: a
+        fresh update keeps its full sample weight, an update `s` rounds
+        stale is discounted by 1/sqrt(1+s)."""
+        return 1.0 / math.sqrt(1.0 + max(staleness, 0))
+
+    def aggregate(self, participants: List[str], round_idx: int,
+                  staleness: Optional[Dict[str, int]] = None) -> None:
+        stale = staleness or {}
         ups = [self._pending[c] for c in participants if c in self._pending]
-        ws = [self._weights[c] for c in participants if c in self._pending]
+        ws = [self._weights[c] * self.staleness_discount(stale.get(c, 0))
+              for c in participants if c in self._pending]
         if ups:
             self.server.state.aggregate(ups, ws)
             self.server.history.append({

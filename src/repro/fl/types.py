@@ -6,7 +6,7 @@ column."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.fl.telemetry import Segment
 
@@ -17,7 +17,19 @@ class TrainerHooks:
     def run_local(self, client: str, round_idx: int) -> None:  # pragma: no cover
         pass
 
-    def aggregate(self, participants: List[str], round_idx: int) -> None:  # pragma: no cover
+    def aggregate(self, participants: List[str], round_idx: int,
+                  staleness: Optional[Dict[str, int]] = None) -> None:  # pragma: no cover
+        """Fold the participants' buffered updates into the global model.
+
+        `staleness` maps each participant to the number of aggregation
+        rounds that fired between its dispatch and this aggregation
+        (always 0 under the synchronous barrier; FedBuff-style async
+        engines report how stale each buffered update is so the
+        implementation can discount it, e.g. by 1/sqrt(1+staleness)).
+        Implementations overriding the legacy 2-argument signature keep
+        working — engines only pass `staleness` to hooks that accept
+        it.
+        """
         pass
 
 

@@ -350,3 +350,70 @@ class TestClusterEvents:
         r.bus.subscribe(ClientReady, lambda ev: seen.append(ev.client))
         r.run()
         assert set(seen) >= {"slow", "mid", "fast"}
+
+
+# ---------------------------------------------------------------------------
+# Staleness reporting: the async engine tags each buffered result with
+# its dispatch round and hands hooks the FedBuff staleness; the sync
+# barrier reports nothing (every update is fresh). Legacy 2-argument
+# hook overrides keep working.
+# ---------------------------------------------------------------------------
+class TestStalenessReporting:
+    class _Recorder:
+        def __init__(self):
+            self.calls = []
+
+        def run_local(self, client, round_idx):
+            pass
+
+        def aggregate(self, participants, round_idx, staleness=None):
+            self.calls.append((round_idx, list(participants),
+                               dict(staleness or {})))
+
+    class _Legacy:
+        """Pre-redesign hook signature: no staleness parameter."""
+
+        def __init__(self):
+            self.calls = 0
+
+        def run_local(self, client, round_idx):
+            pass
+
+        def aggregate(self, participants, round_idx):
+            self.calls += 1
+
+    def _run(self, policy, hooks, clients=None, n_epochs=6):
+        clients = clients or (
+            ClientProfile("slow", mean_epoch_s=450, jitter=0.0,
+                          n_samples=2),
+            ClientProfile("fast", mean_epoch_s=150, jitter=0.0,
+                          n_samples=1),
+        )
+        cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=n_epochs,
+                          policy=policy, seed=0)
+        return FLCloudRunner(cfg, cloud_cfg=CLOUD, hooks=hooks).run()
+
+    def test_async_straggler_reports_positive_staleness(self):
+        hooks = self._Recorder()
+        res = self._run("fedcostaware_async", hooks)
+        assert len(hooks.calls) == res.rounds_completed
+        stale = {c: s for _, _, st in hooks.calls for c, s in st.items()}
+        assert all(s >= 0 for s in stale.values())
+        # the slow client's result lands rounds after its dispatch
+        flat = [s for _, _, st in hooks.calls for s in st.values()]
+        assert any(s > 0 for s in flat), flat
+        # fresh results are reported fresh
+        assert any(s == 0 for s in flat)
+
+    def test_sync_barrier_reports_no_staleness(self):
+        hooks = self._Recorder()
+        res = self._run("fedcostaware", hooks)
+        assert len(hooks.calls) == res.rounds_completed
+        assert all(st == {} for _, _, st in hooks.calls)
+
+    @pytest.mark.parametrize("policy",
+                             ["fedcostaware", "fedcostaware_async"])
+    def test_legacy_two_arg_hooks_still_work(self, policy):
+        hooks = self._Legacy()
+        res = self._run(policy, hooks)
+        assert hooks.calls == res.rounds_completed

@@ -46,6 +46,57 @@ class TestAggregation:
             0.5 * 0.1 * 4.0)
 
 
+class _StubMetrics:
+    def __init__(self, n_samples):
+        self.n_samples = n_samples
+        self.loss = 0.0
+
+
+class _StubClient:
+    """Duck-typed FLClient returning a fixed parameter value."""
+
+    def __init__(self, value, n_samples):
+        self.value = float(value)
+        self.n = n_samples
+
+    def train_epoch(self, params, round_idx):
+        return {"w": jnp.asarray(self.value)}, _StubMetrics(self.n)
+
+
+class TestStalenessDiscount:
+    """FedBuff-style staleness weighting through TrainerHooks.aggregate
+    (async engines report per-client staleness; the JAX hook discounts
+    each update's sample weight by 1/sqrt(1+staleness))."""
+
+    def _hooks(self):
+        server = FederatedServer({"w": jnp.asarray(0.0)})
+        hooks = JaxTrainerHooks(server, {"a": _StubClient(2.0, 3),
+                                         "b": _StubClient(8.0, 1)})
+        hooks.run_local("a", 0)
+        hooks.run_local("b", 0)
+        return server, hooks
+
+    def test_discount_factor(self):
+        assert JaxTrainerHooks.staleness_discount(0) == 1.0
+        assert JaxTrainerHooks.staleness_discount(3) == pytest.approx(0.5)
+        assert JaxTrainerHooks.staleness_discount(8) == pytest.approx(
+            1.0 / 3.0)
+
+    def test_weighted_average_pinned_with_staleness(self):
+        # weights: a = 3 * 1/sqrt(1+0) = 3, b = 1 * 1/sqrt(1+3) = 0.5
+        # avg = (3*2.0 + 0.5*8.0) / 3.5 = 10/3.5
+        server, hooks = self._hooks()
+        hooks.aggregate(["a", "b"], 0, staleness={"a": 0, "b": 3})
+        assert float(server.params["w"]) == pytest.approx(10.0 / 3.5,
+                                                          rel=1e-6)
+
+    def test_no_staleness_reduces_to_sample_weights(self):
+        # plain FedAvg: (3*2.0 + 1*8.0) / 4 = 3.5
+        server, hooks = self._hooks()
+        hooks.aggregate(["a", "b"], 0)
+        assert float(server.params["w"]) == pytest.approx(3.5, rel=1e-6)
+
+
 class TestPartition:
     def test_dual_dirichlet_disjoint_and_sized(self):
         labels = np.random.RandomState(0).randint(0, 10, 5000)

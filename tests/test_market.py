@@ -1,0 +1,405 @@
+"""Tests for the provider-agnostic SpotMarket API: trace-driven price
+sources, cross-provider arbitration, and per-provider billing."""
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.cloud.accounting import CostAccountant
+from repro.cloud.pricing import (Provider, SpotMarket, TracePriceSource,
+                                 Zone)
+from repro.cloud.simulator import CloudSimulator
+from repro.cloud.traces import (TraceFormatError, load_price_trace,
+                                parse_price_file, shared_epoch,
+                                validate_dir)
+from repro.common.config import (CloudConfig, MarketConfig,
+                                 ProviderConfig)
+from repro.core.events import (InstancePreempted,
+                               InstancePreemptionWarning)
+
+FIXTURES = Path(__file__).parent / "fixtures" / "prices"
+
+
+class _Flat:
+    """Constant-price source for arbitration tests."""
+
+    def __init__(self, p):
+        self._p = p
+
+    def price(self, t):
+        return self._p
+
+    def integral(self, t0, t1):
+        return self._p * max(t1 - t0, 0.0)
+
+
+def two_provider_market(price_a=0.5, price_b=0.5):
+    m = SpotMarket([Provider("aws", on_demand_rate=1.0),
+                    Provider("gcp", on_demand_rate=0.9)])
+    m.add_zone(Zone("aws-1a", "aws-1", "aws"), _Flat(price_a))
+    m.add_zone(Zone("gcp-1a", "gcp-1", "gcp"), _Flat(price_b))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# TracePriceSource: piecewise-constant history at irregular times.
+# ---------------------------------------------------------------------------
+class TestTracePriceSource:
+    TIMES = [0.0, 700.0, 1000.0, 5200.0, 9000.0]
+    PRICES = [0.40, 0.35, 0.55, 0.30, 0.45]
+
+    def _src(self):
+        return TracePriceSource(self.TIMES, self.PRICES)
+
+    def test_price_lookup_is_left_step(self):
+        s = self._src()
+        assert s.price(0.0) == 0.40
+        assert s.price(699.9) == 0.40
+        assert s.price(700.0) == 0.35
+        assert s.price(4000.0) == 0.55
+
+    def test_horizon_clamp(self):
+        s = self._src()
+        assert s.price(-100.0) == 0.40       # before first update
+        assert s.price(1e9) == 0.45          # last price extends
+        # integral past the horizon grows at the last price
+        base = s.integral(0.0, 9000.0)
+        assert s.integral(0.0, 9000.0 + 100.0) == \
+            pytest.approx(base + 100.0 * 0.45, rel=1e-12)
+
+    def test_integral_matches_numpy_cumsum_reference(self):
+        s = self._src()
+        # dense step-function reference on a 1s grid via cumsum
+        grid = np.arange(0.0, 9500.0, 1.0)
+        idx = np.clip(np.searchsorted(self.TIMES, grid, side="right") - 1,
+                      0, len(self.PRICES) - 1)
+        dense = np.concatenate(
+            [[0.0], np.cumsum(np.asarray(self.PRICES)[idx])])
+        for t0, t1 in [(0.0, 9000.0), (650.0, 720.0), (999.0, 5201.0),
+                       (100.0, 100.0), (3000.0, 2000.0)]:
+            want = dense[int(t1)] - dense[int(t0)] if t1 > t0 else 0.0
+            assert s.integral(t0, t1) == pytest.approx(want, rel=1e-12)
+
+    def test_irregular_intervals_random_reference(self):
+        rng = np.random.RandomState(0)
+        times = np.cumsum(rng.uniform(5.0, 500.0, size=40))
+        prices = rng.uniform(0.2, 1.0, size=40)
+        s = TracePriceSource(times, prices)
+        for _ in range(20):
+            t0, t1 = sorted(rng.uniform(times[0], times[-1], size=2))
+            # brute-force segment walk
+            want, t = 0.0, t0
+            while t < t1:
+                i = max(np.searchsorted(times, t, side="right") - 1, 0)
+                seg_end = times[i + 1] if i + 1 < len(times) else t1
+                step = min(seg_end, t1) - t
+                want += prices[i] * step
+                t += step
+            assert s.integral(t0, t1) == pytest.approx(want, rel=1e-9)
+
+    def test_rejects_bad_input(self):
+        with pytest.raises(ValueError, match="ascending"):
+            TracePriceSource([0.0, 10.0, 5.0], [1.0, 1.0, 1.0])
+        with pytest.raises(ValueError, match="negative"):
+            TracePriceSource([0.0, 1.0], [0.5, -0.1])
+        with pytest.raises(ValueError):
+            TracePriceSource([], [])
+
+
+# ---------------------------------------------------------------------------
+# Trace file loading (the real-format fixtures).
+# ---------------------------------------------------------------------------
+class TestTraceLoader:
+    def test_fixture_roundtrip(self):
+        records = parse_price_file(FIXTURES / "aws.csv")
+        zones = load_price_trace(FIXTURES / "aws.csv", provider="aws")
+        assert [z.name for z, _ in zones] == ["us-east-1a", "us-east-1b"]
+        assert all(z.provider == "aws" and z.region == "us-east-1"
+                   for z, _ in zones)
+        t0 = min(r.timestamp for r in records)
+        for zone, src in zones:
+            zrecs = [r for r in records if r.zone == zone.name]
+            for r in zrecs:
+                assert src.price(r.timestamp - t0) == \
+                    pytest.approx(r.price, rel=1e-12)
+
+    def test_gcp_zone_region_split(self):
+        zones = load_price_trace(FIXTURES / "gcp.csv", provider="gcp")
+        assert [z.name for z, _ in zones] == \
+            ["us-central1-a", "us-central1-b"]
+        assert all(z.region == "us-central1" for z, _ in zones)
+
+    def test_shared_epoch_alignment(self):
+        paths = [FIXTURES / "aws.csv", FIXTURES / "gcp.csv"]
+        epoch = shared_epoch(paths)
+        aws_first = min(r.timestamp
+                        for r in parse_price_file(paths[0]))
+        assert epoch == aws_first          # aws starts 7.5 min earlier
+        # with the shared epoch, the gcp trace starts at t=450s, and
+        # its pre-horizon prices clamp to the first record
+        (za, sa), (zb, sb) = load_price_trace(paths[1], provider="gcp",
+                                              epoch=epoch)
+        assert sb.horizon[0] == pytest.approx(450.0)
+        assert sb.price(0.0) == sb.price(450.0)
+
+    def test_validate_dir_reports_all_fixtures(self):
+        lines = validate_dir(FIXTURES)
+        assert len(lines) == 2
+        assert any("aws.csv" in ln for ln in lines)
+
+    def test_malformed_rows_raise(self, tmp_path):
+        hdr = ("Timestamp,AvailabilityZone,InstanceType,"
+               "ProductDescription,SpotPrice\n")
+        cases = {
+            "badcols.csv": hdr + "2024-03-01T00:00:00Z,z1,g5.xlarge\n",
+            "badprice.csv": hdr
+            + "2024-03-01T00:00:00Z,z1,g5.xlarge,Linux/UNIX,oops\n",
+            "negprice.csv": hdr
+            + "2024-03-01T00:00:00Z,z1,g5.xlarge,Linux/UNIX,-1\n",
+            "badtime.csv": hdr
+            + "not-a-time,z1,g5.xlarge,Linux/UNIX,0.4\n",
+            "badheader.csv": "a,b,c\n",
+            "empty.csv": hdr,
+        }
+        for name, content in cases.items():
+            p = tmp_path / name
+            p.write_text(content)
+            with pytest.raises(TraceFormatError):
+                parse_price_file(p)
+
+    def test_jsonl_format(self, tmp_path):
+        p = tmp_path / "x.jsonl"
+        p.write_text(
+            '{"Timestamp": "2024-03-01T00:00:00Z", "AvailabilityZone": '
+            '"us-east-1a", "InstanceType": "g5.xlarge", '
+            '"ProductDescription": "Linux/UNIX", "SpotPrice": "0.41"}\n'
+            '{"Timestamp": "2024-03-01T01:00:00Z", "AvailabilityZone": '
+            '"us-east-1a", "InstanceType": "g5.xlarge", '
+            '"ProductDescription": "Linux/UNIX", "SpotPrice": 0.44}\n')
+        [(zone, src)] = load_price_trace(p)
+        assert zone.name == "us-east-1a"
+        assert src.price(0.0) == pytest.approx(0.41)
+        assert src.price(3600.0) == pytest.approx(0.44)
+
+
+# ---------------------------------------------------------------------------
+# Cross-provider arbitration.
+# ---------------------------------------------------------------------------
+class TestCheapestZoneArbitration:
+    def test_tie_breaks_to_first_registered(self):
+        m = two_provider_market(0.5, 0.5)
+        z, p = m.cheapest_zone(0.0)
+        assert (z.provider, z.name) == ("aws", "aws-1a") and p == 0.5
+
+    def test_tie_break_follows_registration_not_name(self):
+        # register gcp first: the tie now resolves to gcp even though
+        # "aws-1a" sorts first lexicographically
+        m = SpotMarket([Provider("gcp", 0.9), Provider("aws", 1.0)])
+        m.add_zone(Zone("gcp-1a", "gcp-1", "gcp"), _Flat(0.5))
+        m.add_zone(Zone("aws-1a", "aws-1", "aws"), _Flat(0.5))
+        z, _ = m.cheapest_zone(0.0)
+        assert z.provider == "gcp"
+
+    def test_strictly_cheaper_provider_wins(self):
+        m = two_provider_market(0.5, 0.49)
+        z, p = m.cheapest_zone(0.0)
+        assert z.provider == "gcp" and p == 0.49
+
+    def test_provider_restriction(self):
+        m = two_provider_market(0.5, 0.3)
+        z, p = m.cheapest_zone(0.0, providers=["aws"])
+        assert z.provider == "aws" and p == 0.5
+
+    def test_allowed_zone_restriction(self):
+        m = two_provider_market(0.3, 0.5)
+        z, _ = m.cheapest_zone(0.0, allowed=["gcp-1a"])
+        assert z.name == "gcp-1a"
+
+    def test_no_candidates_raises(self):
+        m = two_provider_market()
+        with pytest.raises(ValueError, match="no zone"):
+            m.cheapest_zone(0.0, providers=["azure"])
+
+    def test_default_synthetic_tie_break_is_zone_zero(self):
+        """sigma=0 makes zones 0 and 3 tie at 0.98x mean; the
+        pre-redesign `min` picked zone 0 — registration order must
+        preserve that."""
+        m = SpotMarket.synthetic(CloudConfig(spot_rate_sigma=0.0), seed=0)
+        z, _ = m.cheapest_zone(0.0)
+        assert z.name == "us-east-1a"
+
+
+# ---------------------------------------------------------------------------
+# Per-provider billing semantics through the simulator + accountant.
+# ---------------------------------------------------------------------------
+def _mixed_market_cfg():
+    return CloudConfig(spot_rate_sigma=0.0, market=MarketConfig(providers=(
+        ProviderConfig(name="aws", spot_rate_sigma=0.0, n_zones=1,
+                       min_billing_s=60.0),
+        ProviderConfig(name="gcp", spot_rate_sigma=0.0, n_zones=1,
+                       spot_rate_mean=0.30, min_billing_s=30.0),
+    )))
+
+
+class TestPerProviderBilling:
+    @pytest.mark.parametrize("prov,floor_s", [("aws", 60.0),
+                                              ("gcp", 30.0)])
+    def test_min_billing_floor_is_per_provider(self, prov, floor_s):
+        cfg = _mixed_market_cfg()
+        sim = CloudSimulator(cfg, seed=0)
+        acct = CostAccountant(sim.bus, sim.market, clock=lambda: sim.now)
+        inst = sim.request_instance(f"c_{prov}", zone="us-east-1a",
+                                    provider=prov)
+        sim.run_until_idle()
+        sim.now = inst.t_ready + 2.0       # used 2s; floor applies
+        sim.terminate(inst)
+        want = sim.market.cost(inst.zone, inst.t_ready,
+                               inst.t_ready + floor_s,
+                               on_demand=False, provider=prov)
+        assert inst.cost == pytest.approx(want, rel=1e-9)
+        # the accountant's incremental totals agree with the ledger
+        assert acct.client_cost(f"c_{prov}") == \
+            pytest.approx(want, rel=1e-9)
+        # the two floors genuinely differ: gcp's 30s floor bills half
+        # the seconds of aws's 60s floor
+        assert floor_s / 60.0 == pytest.approx(
+            want / sim.market.cost(inst.zone, inst.t_ready,
+                                   inst.t_ready + 60.0, on_demand=False,
+                                   provider=prov), rel=0.25)
+
+    def test_billing_granularity_rounds_up(self):
+        cfg = CloudConfig(spot_rate_sigma=0.0, market=MarketConfig(
+            providers=(ProviderConfig(name="aws", spot_rate_sigma=0.0,
+                                      n_zones=1, min_billing_s=0.0,
+                                      billing_granularity_s=3600.0),)))
+        sim = CloudSimulator(cfg, seed=0)
+        inst = sim.request_instance("c")
+        sim.run_until_idle()
+        sim.now = inst.t_ready + 1800.0        # half a billing unit used
+        sim.terminate(inst)
+        want = sim.market.cost(inst.zone, inst.t_ready,
+                               inst.t_ready + 3600.0, on_demand=False)
+        assert inst.cost == pytest.approx(want, rel=1e-9)
+
+    def test_preemption_warning_precedes_reclaim(self):
+        cfg = CloudConfig(spot_rate_sigma=0.0, preemption_rate_per_hr=50.0,
+                          market=MarketConfig(providers=(
+                              ProviderConfig(name="aws",
+                                             spot_rate_sigma=0.0,
+                                             n_zones=1,
+                                             preemption_notice_s=120.0),)))
+        sim = CloudSimulator(cfg, seed=1)
+        warns, reclaims = [], []
+        sim.bus.subscribe(InstancePreemptionWarning,
+                          lambda ev: warns.append(ev))
+        sim.bus.subscribe(InstancePreempted,
+                          lambda ev: reclaims.append(ev))
+        sim.request_instance("c")
+        sim.run_until_idle(t_max=10 * 3600)
+        assert len(warns) == 1 and len(reclaims) == 1
+        assert warns[0].t <= reclaims[0].t
+        assert warns[0].reclaim_at == pytest.approx(reclaims[0].t)
+
+    def test_default_market_has_no_warning_events(self):
+        sim = CloudSimulator(CloudConfig(spot_rate_sigma=0.0,
+                                         preemption_rate_per_hr=50.0),
+                             seed=1)
+        warns = []
+        sim.bus.subscribe(InstancePreemptionWarning,
+                          lambda ev: warns.append(ev))
+        sim.request_instance("c")
+        sim.run_until_idle(t_max=10 * 3600)
+        assert warns == []
+
+
+# ---------------------------------------------------------------------------
+# Market construction from config.
+# ---------------------------------------------------------------------------
+class TestMarketConstruction:
+    def test_for_cloud_config_defaults_to_synthetic(self):
+        cfg = CloudConfig()
+        m = SpotMarket.for_cloud_config(cfg, seed=0)
+        assert list(m.providers) == ["aws"]
+        assert len(m.zones) == cfg.n_zones
+
+    def test_synthetic_matches_legacy_pricebook(self):
+        from repro.cloud.pricing import PriceBook
+        cfg = CloudConfig()
+        a = SpotMarket.synthetic(cfg, seed=3)
+        b = PriceBook(cfg, seed=3)
+        for z in a.zones:
+            for t in (0.0, 3600.0, 86400.0):
+                assert a.spot_price(z.name, t) == b.spot_price(z.name, t)
+
+    def test_trace_market_from_config(self):
+        m = SpotMarket.from_market_config(MarketConfig(providers=(
+            ProviderConfig(name="aws",
+                           price_trace=str(FIXTURES / "aws.csv")),
+            ProviderConfig(name="gcp",
+                           price_trace=str(FIXTURES / "gcp.csv")),
+        )))
+        assert list(m.providers) == ["aws", "gcp"]
+        assert len(m.zones) == 4
+        # provider registration order is the arbitration order
+        assert [z.provider for z in m.zones] == \
+            ["aws", "aws", "gcp", "gcp"]
+
+    def test_duplicate_provider_rejected(self):
+        m = SpotMarket([Provider("aws", 1.0)])
+        with pytest.raises(ValueError, match="already"):
+            m.add_provider(Provider("aws", 1.0))
+
+    def test_zone_requires_registered_provider(self):
+        m = SpotMarket([Provider("aws", 1.0)])
+        with pytest.raises(ValueError, match="unknown provider"):
+            m.add_zone(Zone("z", "r", "gcp"), _Flat(0.5))
+
+
+class TestPinnedZoneProviderResolution:
+    """A bare zone name (ClientProfile.zone with no provider) must bind
+    to the zone's owning provider, not blindly to the default one."""
+
+    def test_resolve_provider_prefers_owner(self):
+        m = two_provider_market()
+        assert m.resolve_provider("gcp-1a") == "gcp"
+        assert m.resolve_provider("aws-1a") == "aws"
+        assert m.resolve_provider("unknown") == "aws"      # default
+        assert m.resolve_provider("gcp-1a", "aws") == "aws"  # explicit
+
+    def test_request_in_pinned_foreign_zone(self):
+        cfg = CloudConfig(spot_rate_sigma=0.0, market=MarketConfig(
+            providers=(
+                ProviderConfig(name="aws",
+                               price_trace=str(FIXTURES / "aws.csv")),
+                ProviderConfig(name="gcp", min_billing_s=30.0,
+                               price_trace=str(FIXTURES / "gcp.csv")),
+            )))
+        sim = CloudSimulator(cfg, seed=0)
+        inst = sim.request_instance("c", zone="us-central1-a")
+        sim.run_until_idle()
+        assert inst.provider == "gcp"
+        sim.now = inst.t_ready + 3600.0
+        assert sim.accrued_cost(inst) > 0      # prices resolve, no KeyError
+
+    def test_pinned_foreign_zone_run_completes(self):
+        from repro.common.config import ClientProfile, FLRunConfig
+        from repro.fl.runner import FLCloudRunner
+        cfg = CloudConfig(spot_rate_sigma=0.0, market=MarketConfig(
+            providers=(
+                ProviderConfig(name="aws",
+                               price_trace=str(FIXTURES / "aws.csv")),
+                ProviderConfig(name="gcp",
+                               price_trace=str(FIXTURES / "gcp.csv")),
+            )))
+        clients = (ClientProfile("pinned", mean_epoch_s=300, jitter=0.0,
+                                 zone="us-central1-a"),
+                   ClientProfile("free", mean_epoch_s=150, jitter=0.0))
+        run_cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=2,
+                              policy="fedcostaware", seed=0)
+        r = FLCloudRunner(run_cfg, cloud_cfg=cfg)
+        res = r.run()
+        assert res.rounds_completed == 2
+        pinned = [e for e in r.sim.event_log
+                  if e["client"] == "pinned" and e["kind"] == "request"]
+        assert all(e["provider"] == "gcp" for e in pinned)
