@@ -14,42 +14,57 @@ from typing import Dict, List, Optional
 
 
 class ObjectStore:
+    """Abstract key -> bytes store (the simulated S3 surface)."""
+
     def put(self, key: str, data: bytes) -> None:
+        """Durably write `data` under `key`, replacing any old value."""
         raise NotImplementedError
 
     def get(self, key: str) -> Optional[bytes]:
+        """The bytes under `key`, or None if absent."""
         raise NotImplementedError
 
     def list(self, prefix: str = "") -> List[str]:
+        """Sorted keys starting with `prefix`."""
         raise NotImplementedError
 
     def delete(self, key: str) -> None:
+        """Remove `key` (a no-op when absent)."""
         raise NotImplementedError
 
 
 class MemoryStore(ObjectStore):
+    """In-process dict-backed store (tests, default runs)."""
+
     def __init__(self):
         self._data: Dict[str, bytes] = {}
         self._lock = threading.Lock()
 
     def put(self, key, data):
+        """Store a copy of `data` under `key`."""
         with self._lock:
             self._data[key] = bytes(data)
 
     def get(self, key):
+        """The bytes under `key`, or None."""
         with self._lock:
             return self._data.get(key)
 
     def list(self, prefix=""):
+        """Sorted keys starting with `prefix`."""
         with self._lock:
             return sorted(k for k in self._data if k.startswith(prefix))
 
     def delete(self, key):
+        """Remove `key` if present."""
         with self._lock:
             self._data.pop(key, None)
 
 
 class FileStore(ObjectStore):
+    """Local-filesystem store; keys flatten to one directory level
+    (`/` -> `__`), writes are atomic (temp file + rename)."""
+
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
@@ -59,6 +74,8 @@ class FileStore(ObjectStore):
         return os.path.join(self.root, safe)
 
     def put(self, key, data):
+        """Atomically write `data` under `key` (temp + rename), so a
+        crash/preemption mid-write never corrupts the old value."""
         path = self._path(key)
         fd, tmp = tempfile.mkstemp(dir=self.root)
         try:
@@ -71,6 +88,7 @@ class FileStore(ObjectStore):
             raise
 
     def get(self, key):
+        """The bytes under `key`, or None."""
         path = self._path(key)
         if not os.path.exists(path):
             return None
@@ -78,11 +96,13 @@ class FileStore(ObjectStore):
             return f.read()
 
     def list(self, prefix=""):
+        """Sorted keys starting with `prefix`."""
         safe = prefix.replace("/", "__")
         return sorted(k.replace("__", "/") for k in os.listdir(self.root)
                       if k.startswith(safe) and not k.startswith("tmp"))
 
     def delete(self, key):
+        """Remove `key` if present."""
         path = self._path(key)
         if os.path.exists(path):
             os.unlink(path)

@@ -32,6 +32,10 @@ from repro.cloud.pricing import SpotMarket
 
 
 class CostAccountant:
+    """Per-client dollar totals as a bus consumer: O(1) amortized
+    folding of closed `BillingTick` segments plus on-demand pricing of
+    the open ones. Pass `prices=None` (no clock) for replay mode."""
+
     def __init__(self, bus: EventBus, prices: Optional[SpotMarket] = None,
                  clock: Optional[Callable[[], float]] = None):
         self._prices = prices
@@ -79,14 +83,17 @@ class CostAccountant:
                                  provider=getattr(inst, "provider", None))
 
     def client_cost(self, client: str) -> float:
+        """Dollars accrued by `client` so far, open segments included."""
         return (self._closed[client]
                 + sum(self._open_cost(self._open[i])
                       for i in self._open_by_client[client]))
 
     def total_cost(self) -> float:
+        """Dollars accrued by the whole run so far."""
         return (self._closed_total
                 + sum(self._open_cost(i) for i in self._open.values()))
 
     def per_client(self) -> Dict[str, float]:
+        """`client_cost` for every client ever billed or running."""
         clients = set(self._closed) | set(self._open_by_client)
         return {c: self.client_cost(c) for c in clients}

@@ -1,0 +1,185 @@
+"""Pluggable spot-reclaim models for the cloud simulator.
+
+Real spot markets do not preempt at a flat Poisson rate: interruptions
+cluster when demand (and therefore the spot price) spikes, and recorded
+market days come with recorded reclaim times. This module makes the
+reclaim process a strategy the simulator consults once per spot
+instance, behind one small protocol:
+
+  PreemptionModel.next_preemption_delay(inst, now, rng)
+      -> seconds until this instance is reclaimed, or None for "never".
+
+Three implementations:
+
+  ConstantRateModel        — the pre-model behavior: exponential
+                             inter-arrival at `preemption_rate_per_hr`.
+                             Bit-identical to the old inline code (same
+                             RNG, same draw, no draw at rate 0), so
+                             default runs and golden traces do not move.
+  PriceCoupledModel        — non-homogeneous hazard coupled to the
+                             zone's current spot price: a price spike in
+                             a `TracePriceSource` day drives an
+                             interruption burst. Sensitivity is per
+                             provider (`Provider.
+                             preemption_price_sensitivity`).
+  ReplayInterruptionModel  — replays recorded reclaim timestamps
+                             (`SpotMarket.interruptions`, loaded from
+                             `<provider>.interruptions.csv` files by
+                             `repro.cloud.traces`) on the market clock.
+
+`build_preemption_model` resolves `CloudConfig.preemption_model`
+("constant" | "price_coupled" | "replay") into an instance bound to the
+run's `SpotMarket`.
+
+See docs/markets.md for the trace formats and docs/architecture.md for
+where the model sits in the event flow.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from typing import Dict, Optional, Protocol, Tuple
+
+import numpy as np
+
+from repro.cloud.pricing import SpotMarket
+
+MODEL_NAMES = ("constant", "price_coupled", "replay")
+
+
+class PreemptionModel(Protocol):
+    """When does the spot market reclaim an instance?"""
+
+    def next_preemption_delay(self, inst, now: float,
+                              rng: np.random.RandomState,
+                              ) -> Optional[float]:
+        """Seconds from `now` until `inst` is reclaimed, or None if it
+        never is. Called once when the instance becomes RUNNING; the
+        simulator schedules the provider's warning and the reclaim off
+        the returned delay. Draws (if any) must come from `rng` so
+        seeded runs stay deterministic."""
+        ...
+
+
+class ConstantRateModel:
+    """Flat Poisson reclaims — the paper's §III-D fault model and the
+    simulator's historical behavior.
+
+    The delay is a single `rng.exponential` draw with the exact
+    arithmetic of the pre-model inline code (and no draw at all when
+    the rate is zero), keeping seeded event sequences bit-identical
+    across the refactor.
+    """
+
+    def __init__(self, rate_per_hr: float):
+        self.rate_per_hr = rate_per_hr
+
+    def next_preemption_delay(self, inst, now, rng):
+        """One exponential inter-arrival at the configured rate."""
+        if self.rate_per_hr <= 0.0:
+            return None
+        rate = self.rate_per_hr / 3600.0
+        return float(rng.exponential(1.0 / rate))
+
+
+class PriceCoupledModel:
+    """Reclaim hazard scaled by the zone's current price level.
+
+    The instantaneous hazard is
+
+        lambda(t) = base_rate * max(0, 1 + s * (p(t) / p_ref - 1))
+
+    where `p(t)` is the zone's spot price, `p_ref` its time-averaged
+    price over the recorded horizon (`SpotMarket.mean_spot_price`), and
+    `s` the owning provider's `preemption_price_sensitivity`. At `s=0`
+    this degrades to the constant model's mean behavior; larger `s`
+    concentrates interruptions into price spikes (a 2x spike at `s=5`
+    multiplies the hazard by 6).
+
+    Sampling uses per-step thinning on a `step_s` grid: each step
+    preempts with probability `1 - exp(-lambda * step)`. That keeps the
+    model correct under hazard clamping and arbitrary price shapes at
+    the cost of one uniform draw per step, which is cheap at simulator
+    scale.
+    """
+
+    def __init__(self, market: SpotMarket, base_rate_per_hr: float,
+                 step_s: float = 60.0, horizon_s: float = 14 * 86400.0):
+        self.market = market
+        self.base_rate_per_hr = base_rate_per_hr
+        self.step_s = step_s
+        self.horizon_s = horizon_s
+        self._ref_price: Dict[Tuple[str, str], float] = {}
+
+    def _ref(self, provider: str, zone: str) -> float:
+        """Cached per-zone reference (mean) price."""
+        key = (provider, zone)
+        if key not in self._ref_price:
+            self._ref_price[key] = self.market.mean_spot_price(
+                zone, provider)
+        return self._ref_price[key]
+
+    def hazard(self, provider: str, zone: str, t: float) -> float:
+        """Instantaneous reclaim hazard (events/second) at `t`."""
+        base = self.base_rate_per_hr / 3600.0
+        if base <= 0.0:
+            return 0.0
+        s = self.market.provider_of(provider).preemption_price_sensitivity
+        ref = self._ref(provider, zone)
+        level = self.market.spot_price(zone, t, provider) / ref
+        return base * max(1.0 + s * (level - 1.0), 0.0)
+
+    def next_preemption_delay(self, inst, now, rng):
+        """Thinning over `step_s` windows until a hit or the horizon."""
+        if self.base_rate_per_hr <= 0.0:
+            return None
+        n_steps = int(self.horizon_s / self.step_s)
+        for k in range(n_steps):
+            t = now + k * self.step_s
+            lam = self.hazard(inst.provider, inst.zone, t)
+            if lam <= 0.0:
+                continue
+            p = -math.expm1(-lam * self.step_s)
+            if rng.random_sample() < p:
+                return (k + 1) * self.step_s
+        return None
+
+
+class ReplayInterruptionModel:
+    """Recorded real interruption timestamps, on the market clock.
+
+    A reclaim recorded at time T in zone z takes down whatever spot
+    instance is running there at T (every co-located instance sees the
+    same event, as a real capacity reclaim would). An instance whose
+    zone has no recorded interruption after `now` runs until terminated.
+    Draws nothing — replayed fault patterns are exactly reproducible.
+    """
+
+    def __init__(self, market: SpotMarket):
+        self.market = market
+
+    def next_preemption_delay(self, inst, now, rng):
+        """First recorded interruption in the instance's zone after
+        `now` (strictly — an instance born at the reclaim instant
+        survives it)."""
+        times = self.market.interruptions.get((inst.provider, inst.zone))
+        if not times:
+            return None
+        i = bisect.bisect_right(times, now)
+        if i >= len(times):
+            return None
+        return times[i] - now
+
+
+def build_preemption_model(cfg, market: SpotMarket) -> PreemptionModel:
+    """Resolve `CloudConfig.preemption_model` into a model bound to
+    `market`. Unknown names raise `ValueError` listing the registry."""
+    name = getattr(cfg, "preemption_model", "constant")
+    if name == "constant":
+        return ConstantRateModel(cfg.preemption_rate_per_hr)
+    if name == "price_coupled":
+        return PriceCoupledModel(market, cfg.preemption_rate_per_hr)
+    if name == "replay":
+        return ReplayInterruptionModel(market)
+    raise ValueError(f"unknown preemption model {name!r}; "
+                     f"known: {MODEL_NAMES}")

@@ -50,24 +50,37 @@ class Provider:
     billing_granularity_s: float = 1.0  # round billed duration up to this
     min_billing_s: float = 60.0         # spot min-billing floor (seconds)
     preemption_notice_s: float = 0.0    # reclaim warning lead time
+    # hazard-vs-price slope under the price-coupled preemption model
+    # (repro.cloud.preemption.PriceCoupledModel); 0 keeps this
+    # provider's reclaim rate flat even when the market spikes
+    preemption_price_sensitivity: float = 1.0
 
     @classmethod
     def from_cloud_config(cls, cfg: CloudConfig,
                           name: str = DEFAULT_PROVIDER) -> "Provider":
+        """Build the single default provider a legacy scalar
+        `CloudConfig` (no explicit `MarketConfig`) describes."""
         return cls(name, on_demand_rate=cfg.on_demand_rate,
                    billing_granularity_s=cfg.billing_granularity_s,
-                   min_billing_s=cfg.min_billing_s)
+                   min_billing_s=cfg.min_billing_s,
+                   preemption_price_sensitivity=(
+                       cfg.preemption_price_sensitivity))
 
     @classmethod
     def from_provider_config(cls, pc: ProviderConfig) -> "Provider":
+        """Lift one `MarketConfig` provider entry into the runtime
+        descriptor every billing/preemption decision reads."""
         return cls(pc.name, on_demand_rate=pc.on_demand_rate,
                    billing_granularity_s=pc.billing_granularity_s,
                    min_billing_s=pc.min_billing_s,
-                   preemption_notice_s=pc.preemption_notice_s)
+                   preemption_notice_s=pc.preemption_notice_s,
+                   preemption_price_sensitivity=(
+                       pc.preemption_price_sensitivity))
 
 
 @dataclasses.dataclass(frozen=True)
 class Zone:
+    """A placement target: (provider, region, availability zone)."""
     name: str                       # e.g. "us-east-1a"
     region: str                     # e.g. "us-east-1"
     provider: str = DEFAULT_PROVIDER
@@ -76,7 +89,9 @@ class Zone:
 class PriceSource(Protocol):
     """One zone's spot price process."""
 
-    def price(self, t: float) -> float: ...
+    def price(self, t: float) -> float:
+        """Spot price ($/hr) in force at time `t`."""
+        ...
 
     def integral(self, t0: float, t1: float) -> float:
         """Integral of price over [t0, t1] in $·s/hr (divide by 3600
@@ -110,6 +125,8 @@ class SyntheticOUSource:
         self._cum = np.concatenate([[0.0], np.cumsum(prices) * step_s])
 
     def price(self, t: float) -> float:
+        """Price of the hourly step containing `t` (last step extends
+        beyond the horizon)."""
         i = min(int(t / self._step), len(self._prices) - 1)
         return float(self._prices[i])
 
@@ -121,6 +138,7 @@ class SyntheticOUSource:
                      + self._prices[i] * (t - i * self._step))
 
     def integral(self, t0: float, t1: float) -> float:
+        """Integral of the price over [t0, t1] in $·s/hr, O(1)."""
         if t1 <= t0:
             return 0.0
         return self._antiderivative(t1) - self._antiderivative(t0)
@@ -165,6 +183,8 @@ class TracePriceSource:
         return min(max(i, 0), len(self._times) - 1)
 
     def price(self, t: float) -> float:
+        """Price of the recorded segment containing `t` (clamped
+        outside the horizon)."""
         return float(self._prices[self._index(t)])
 
     def _antiderivative(self, t: float) -> float:
@@ -177,12 +197,14 @@ class TracePriceSource:
                      + self._prices[i] * (t - self._times[i]))
 
     def integral(self, t0: float, t1: float) -> float:
+        """Integral of the price over [t0, t1] in $·s/hr, O(log n)."""
         if t1 <= t0:
             return 0.0
         return self._antiderivative(t1) - self._antiderivative(t0)
 
     @property
     def horizon(self) -> Tuple[float, float]:
+        """(first, last) recorded update times of the trace."""
         return float(self._times[0]), float(self._times[-1])
 
 
@@ -209,6 +231,10 @@ class SpotMarket:
         self.zones: List[Zone] = []
         self._sources: Dict[Tuple[str, str], PriceSource] = {}
         self._zone_owner: Dict[str, str] = {}   # zone name -> first owner
+        # recorded real interruption timestamps per (provider, zone),
+        # seconds on the market clock, ascending — consumed by the
+        # replay preemption model (repro.cloud.preemption)
+        self.interruptions: Dict[Tuple[str, str], Tuple[float, ...]] = {}
         for p in providers or ():
             self.add_provider(p)
 
@@ -216,6 +242,8 @@ class SpotMarket:
     # Construction.
     # ------------------------------------------------------------------
     def add_provider(self, provider: Provider) -> Provider:
+        """Register a provider; the first registered one is the
+        market's default. Duplicate names raise."""
         if provider.name in self.providers:
             raise ValueError(f"provider {provider.name!r} already "
                              f"registered")
@@ -223,6 +251,9 @@ class SpotMarket:
         return provider
 
     def add_zone(self, zone: Zone, source: PriceSource) -> Zone:
+        """Register a zone and its price source under an
+        already-registered provider; registration order is the
+        cheapest-zone tie-break order."""
         if zone.provider not in self.providers:
             raise ValueError(f"unknown provider {zone.provider!r} for "
                              f"zone {zone.name!r}")
@@ -234,8 +265,18 @@ class SpotMarket:
         self._zone_owner.setdefault(zone.name, zone.provider)
         return zone
 
+    def add_interruptions(self, provider: str, zone: str,
+                          times: Sequence[float]) -> None:
+        """Attach recorded interruption timestamps (market-clock
+        seconds, any order) to one provider's zone for the replay
+        preemption model."""
+        if provider not in self.providers:
+            raise ValueError(f"unknown provider {provider!r}")
+        self.interruptions[(provider, zone)] = tuple(sorted(times))
+
     @property
     def default_provider(self) -> str:
+        """Name of the first-registered provider."""
         return next(iter(self.providers))
 
     @classmethod
@@ -266,16 +307,28 @@ class SpotMarket:
                            seed: int = 0) -> "SpotMarket":
         """Build a (possibly multi-provider) market. Providers with a
         `price_trace` path get trace-driven zones (cloud.traces); the
-        rest synthesize OU zones off a provider-indexed seed."""
-        from repro.cloud.traces import build_zone_sources, parse_price_file
+        rest synthesize OU zones off a provider-indexed seed. Providers
+        with an `interruption_trace` additionally register recorded
+        interruption timestamps for the replay preemption model, on the
+        same market clock as the price histories."""
+        from repro.cloud.traces import (build_interruption_schedule,
+                                        build_zone_sources,
+                                        parse_interruption_file,
+                                        parse_price_file)
         m = cls()
         # parse each history file once; every trace-driven provider then
         # shares one market epoch so their histories stay aligned on the
         # simulated clock
         parsed = {pc.name: parse_price_file(pc.price_trace)
                   for pc in mcfg.providers if pc.price_trace is not None}
-        epoch = (min(r.timestamp for recs in parsed.values()
-                     for r in recs) if parsed else None)
+        interruptions = {pc.name: parse_interruption_file(
+                             pc.interruption_trace)
+                         for pc in mcfg.providers
+                         if pc.interruption_trace is not None}
+        stamps = ([r.timestamp for recs in parsed.values() for r in recs]
+                  or [r.timestamp for recs in interruptions.values()
+                      for r in recs])
+        epoch = min(stamps) if stamps else None
         for pi, pc in enumerate(mcfg.providers):
             prov = m.add_provider(Provider.from_provider_config(pc))
             if pc.price_trace is not None:
@@ -287,6 +340,10 @@ class SpotMarket:
                     prov, pc.spot_rate_mean, pc.spot_rate_sigma,
                     pc.on_demand_rate, pc.n_zones, pc.regions,
                     seed + 1000 * pi)
+            if pc.name in interruptions:
+                for zone_name, times in build_interruption_schedule(
+                        interruptions[pc.name], epoch=epoch).items():
+                    m.add_interruptions(pc.name, zone_name, times)
         return m
 
     @classmethod
@@ -303,6 +360,7 @@ class SpotMarket:
     # Lookups.
     # ------------------------------------------------------------------
     def provider_of(self, name: Optional[str]) -> Provider:
+        """The named provider's descriptor (None -> the default)."""
         return self.providers[name or self.default_provider]
 
     def resolve_provider(self, zone: Optional[str] = None,
@@ -319,20 +377,25 @@ class SpotMarket:
 
     def source(self, zone: str,
                provider: Optional[str] = None) -> PriceSource:
+        """The zone's price source (provider resolved per
+        `resolve_provider`)."""
         return self._sources[(self.resolve_provider(zone, provider),
                               zone)]
 
     def spot_price(self, zone: str, t: float,
                    provider: Optional[str] = None) -> float:
+        """Spot price ($/hr) of a zone at time `t`."""
         return self.source(zone, provider).price(t)
 
     def on_demand_price(self, zone: str, t: float,
                         provider: Optional[str] = None) -> float:
+        """On-demand rate ($/hr) of the zone's provider (flat in t)."""
         return self.provider_of(
             self.resolve_provider(zone, provider)).on_demand_rate
 
     def price(self, zone: str, t: float, on_demand: bool,
               provider: Optional[str] = None) -> float:
+        """`on_demand_price` or `spot_price`, by market kind."""
         return (self.on_demand_price(zone, t, provider) if on_demand
                 else self.spot_price(zone, t, provider))
 
@@ -364,6 +427,21 @@ class SpotMarket:
             rate = self.on_demand_price(zone, t0, provider)
             return rate * max(t1 - t0, 0.0) / 3600.0
         return self.source(zone, provider).integral(t0, t1) / 3600.0
+
+    def mean_spot_price(self, zone: str,
+                        provider: Optional[str] = None) -> float:
+        """Time-averaged spot price of a zone over its recorded horizon
+        (trace sources) or the synthetic 7-day horizon — the reference
+        level the price-coupled preemption model measures spikes
+        against."""
+        src = self.source(zone, provider)
+        horizon = getattr(src, "horizon", None)
+        if horizon is not None and horizon[1] > horizon[0]:
+            t0, t1 = horizon
+        else:
+            t0, t1 = 0.0, 7 * 86400.0
+        mean = src.integral(t0, t1) / (t1 - t0)
+        return mean if mean > 0.0 else src.price(t0)
 
 
 def PriceBook(cfg: CloudConfig, seed: int = 0) -> SpotMarket:

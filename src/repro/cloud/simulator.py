@@ -1,5 +1,6 @@
 """Discrete-event cloud simulator: instance lifecycles, spin-up delays,
-Poisson preemption, and per-second billing against the SpotMarket.
+model-driven spot preemption, and per-second billing against the
+SpotMarket.
 
 This is the stand-in for AWS EC2 + the custom Ray node launcher in the
 paper. The FedCostAware scheduler interacts with it through exactly the
@@ -12,6 +13,12 @@ the min-billing floor, billing granularity and preemption-notice lead
 time all come from the provider descriptor of the zone an instance runs
 in, so a multi-provider market bills each instance by its own
 provider's rules.
+
+Spot reclaims are delegated to a pluggable `PreemptionModel`
+(`repro.cloud.preemption`): the default constant-rate model reproduces
+the historical flat-Poisson behavior bit-for-bit, while the
+price-coupled and recorded-interruption models replay realistic fault
+patterns (see docs/markets.md).
 
 Lifecycle notifications are published as typed events on an `EventBus`
 (`repro.core.events`) — the simulator takes no per-request callbacks, so
@@ -29,6 +36,7 @@ from typing import Callable, Dict, List, Optional, Union
 import numpy as np
 
 from repro.common.config import CloudConfig
+from repro.cloud.preemption import PreemptionModel, build_preemption_model
 from repro.cloud.pricing import DEFAULT_PROVIDER, SpotMarket, Zone
 from repro.core.events import (BillingTick, EventBus, InstancePreempted,
                                InstancePreemptionWarning, InstanceReady,
@@ -41,6 +49,8 @@ REQUESTED, SPINNING_UP, RUNNING, TERMINATED, PREEMPTED = (
 
 @dataclasses.dataclass
 class Instance:
+    """One cloud instance's mutable lifecycle record (the live
+    counterpart of `repro.core.eventlog.InstanceRef` snapshots)."""
     iid: int
     client: str
     zone: str
@@ -64,9 +74,13 @@ class CloudSimulator:
 
     def __init__(self, cfg: CloudConfig,
                  market: Optional[SpotMarket] = None,
-                 seed: int = 0, bus: Optional[EventBus] = None):
+                 seed: int = 0, bus: Optional[EventBus] = None,
+                 preemption_model: Optional[PreemptionModel] = None):
         self.cfg = cfg
         self.market = market or SpotMarket.for_cloud_config(cfg, seed=seed)
+        self.preemption_model = (preemption_model
+                                 or build_preemption_model(cfg,
+                                                           self.market))
         self.bus = bus or EventBus()
         self.now = 0.0
         self._heap: List = []
@@ -89,13 +103,18 @@ class CloudSimulator:
     # Event engine.
     # ------------------------------------------------------------------
     def schedule(self, t: float, fn: Callable[[], None]):
+        """Run `fn` at absolute simulated time `t` (>= now); same-time
+        events fire in scheduling order (FIFO sequence numbers)."""
         assert t >= self.now - 1e-9, (t, self.now)
         heapq.heappush(self._heap, (max(t, self.now), next(self._seq), fn))
 
     def schedule_in(self, delay: float, fn: Callable[[], None]):
+        """`schedule` relative to the current clock."""
         self.schedule(self.now + max(delay, 0.0), fn)
 
     def run_until_idle(self, t_max: float = math.inf):
+        """Drain the event heap (advancing `now`), stopping before the
+        first event past `t_max` (which stays queued)."""
         while self._heap:
             t, _, fn = heapq.heappop(self._heap)
             if t > t_max:
@@ -108,6 +127,8 @@ class CloudSimulator:
     # Instance lifecycle (the paper's Ray-autoscaler custom API analogue).
     # ------------------------------------------------------------------
     def sample_spin_up(self) -> float:
+        """Lognormal provisioning+boot delay around
+        `cfg.spin_up_mean_s`."""
         mu = math.log(self.cfg.spin_up_mean_s)
         return float(np.exp(mu + self._rng.randn() * self.cfg.spin_up_sigma))
 
@@ -115,6 +136,10 @@ class CloudSimulator:
                          zone: Optional[Union[str, Zone]] = None,
                          on_demand: bool = False,
                          provider: Optional[str] = None) -> Instance:
+        """Launch an instance for `client` in `zone` (None -> the
+        currently cheapest zone across the whole market); it becomes
+        RUNNING after a sampled spin-up delay and — if spot — gets its
+        reclaim scheduled by the preemption model."""
         if zone is None:
             z, _ = self.market.cheapest_zone(self.now)
             zone, provider = z.name, z.provider
@@ -137,7 +162,7 @@ class CloudSimulator:
             inst.t_ready = self.now
             inst._billing_from = self.now
             self._log("ready", inst)
-            if not inst.on_demand and self.cfg.preemption_rate_per_hr > 0:
+            if not inst.on_demand:
                 self._schedule_preemption(inst)
             self.bus.publish(InstanceReady(self.now, inst))
 
@@ -145,8 +170,13 @@ class CloudSimulator:
         return inst
 
     def _schedule_preemption(self, inst: Instance):
-        rate = self.cfg.preemption_rate_per_hr / 3600.0
-        delay = float(self._rng.exponential(1.0 / rate))
+        """Ask the preemption model when the spot market reclaims
+        `inst`; schedule the provider's warning and the reclaim. A
+        model answer of None means the instance is never preempted."""
+        delay = self.preemption_model.next_preemption_delay(
+            inst, self.now, self._rng)
+        if delay is None:
+            return
         notice = self.provider_of(inst).preemption_notice_s
         if notice > 0.0:
             # the provider's reclaim warning (AWS: 2 min) precedes the
@@ -230,6 +260,7 @@ class CloudSimulator:
         return sum(self.accrued_cost(i) for i in self._instances.values())
 
     def instances_of(self, client: str) -> List[Instance]:
+        """Every instance (any state) ever created for `client`."""
         return [i for i in self._instances.values() if i.client == client]
 
     # ------------------------------------------------------------------

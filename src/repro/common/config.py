@@ -237,6 +237,15 @@ class ProviderConfig:
     min_billing_s: float = 60.0
     preemption_notice_s: float = 0.0
     price_trace: Optional[str] = None
+    # price-coupled preemption (cloud.preemption.PriceCoupledModel):
+    # hazard multiplier slope vs the zone's mean price. 0 decouples the
+    # provider's reclaim rate from its price level entirely.
+    preemption_price_sensitivity: float = 1.0
+    # recorded real interruption timestamps for this provider's zones
+    # (cloud.preemption.ReplayInterruptionModel); a CSV/JSONL file in
+    # the spot-history format minus the price column, sharing the
+    # market epoch with `price_trace` (see `repro.cloud.traces`)
+    interruption_trace: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +265,17 @@ class CloudConfig:
     spin_up_mean_s: float = 150.0        # instance provisioning + boot
     spin_up_sigma: float = 0.10
     preemption_rate_per_hr: float = 0.0  # paper observed none; configurable
+    # which `repro.cloud.preemption.PreemptionModel` reclaims spot
+    # instances: "constant" (flat Poisson at `preemption_rate_per_hr`,
+    # bit-identical to the pre-model behavior), "price_coupled" (hazard
+    # scales with the zone's current spot price level), or "replay"
+    # (recorded interruption timestamps from the providers'
+    # `interruption_trace` files)
+    preemption_model: str = "constant"
+    # sensitivity of the legacy single-provider synthetic market under
+    # the price-coupled model (multi-provider markets carry it per
+    # provider in `ProviderConfig.preemption_price_sensitivity`)
+    preemption_price_sensitivity: float = 1.0
     billing_granularity_s: float = 1.0   # per-second billing
     min_billing_s: float = 60.0          # AWS bills min 60s for spot
     # explicit multi-provider / trace-driven market; None keeps the
@@ -272,6 +292,12 @@ class SchedulerConfig:
     t_buffer_s: float = 45.0        # pre-warm safety buffer
     calibration_rounds: int = 2     # round1=cold, round2=warm
     checkpoint_every_s: float = 60.0
+    # wall time a preemption-notice-triggered checkpoint takes to write
+    # to cloud storage; the snapshot only lands if the provider's
+    # warning window (`Provider.preemption_notice_s`) is at least this
+    # long, else the engine falls back to periodic-checkpoint (lost
+    # work) semantics
+    warning_ckpt_write_s: float = 10.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -293,4 +319,8 @@ class FLRunConfig:
     # overrides whether cheapest-zone placement may arbitrate across
     # every provider in the market or stays on the default provider
     cross_provider: Optional[bool] = None
+    # None -> the policy's own on_warning default; "ignore" | "drain" |
+    # "checkpoint" overrides how engines react to a provider's
+    # preemption-notice warning (see `repro.fl.engines.base`)
+    on_warning: Optional[str] = None
     seed: int = 0

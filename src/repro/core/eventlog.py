@@ -31,11 +31,18 @@ from typing import Any, Dict, List, Optional, Union
 
 from repro.core.events import EVENT_TYPES, Event, EventBus
 
-# v2: instance snapshots carry the provider of the zone they run in
-# (multi-cloud SpotMarket); v1 logs predate the field and decode with
-# the single-provider default below (see SUPPORTED_SCHEMAS).
-SCHEMA_VERSION = 2
-SUPPORTED_SCHEMAS = (1, 2)
+# Schema history (full vocabulary per version in docs/events.md):
+#   v1 — engine-split vocabulary; instance snapshots without provider
+#   v2 — instance snapshots carry the provider of the zone they run in
+#        (multi-cloud SpotMarket); v1 logs decode with the
+#        single-provider default on InstanceRef
+#   v3 — preemption-notice checkpointing vocabulary:
+#        ClientPreemptionWarning / ClientCheckpointed /
+#        ClientResumedFromCheckpoint. Purely additive — v1/v2 logs
+#        (golden copies under tests/golden/v1, tests/golden/v2) replay
+#        unchanged.
+SCHEMA_VERSION = 3
+SUPPORTED_SCHEMAS = (1, 2, 3)
 
 _SCALARS = (bool, int, float, str)
 
@@ -84,6 +91,8 @@ def _encode_value(v: Any) -> Any:
 
 
 def encode_event(ev: Event) -> Dict[str, Any]:
+    """Event dataclass -> JSON-ready dict (`type` key + every field,
+    instances snapshotted)."""
     rec: Dict[str, Any] = {"type": type(ev).__name__}
     for f in dataclasses.fields(ev):
         rec[f.name] = _encode_value(getattr(ev, f.name))
@@ -101,6 +110,8 @@ def _decode_value(v: Any) -> Any:
 
 
 def decode_event(rec: Dict[str, Any]) -> Event:
+    """Inverse of `encode_event`; instance snapshots decode to
+    `InstanceRef`. Raises on event types absent from `EVENT_TYPES`."""
     name = rec["type"]
     if name not in EVENT_TYPES:
         raise ValueError(f"unknown event type in log: {name!r}")
@@ -132,6 +143,8 @@ class EventRecorder:
 
     # ------------------------------------------------------------------
     def dumps(self) -> str:
+        """The full log as JSONL text: header line, then one event per
+        line in publish order."""
         # no sort_keys: dataclass field order and profile insertion
         # order are deterministic, and preserving them keeps replayed
         # dict iteration (e.g. cost-curve client order) identical to
@@ -141,6 +154,7 @@ class EventRecorder:
         return "\n".join(lines) + "\n"
 
     def dump(self, path: Union[str, Path]) -> Path:
+        """Write `dumps()` to `path`, creating parent directories."""
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(self.dumps())
@@ -159,6 +173,7 @@ class EventReplayer:
 
     @classmethod
     def loads(cls, text: str) -> "EventReplayer":
+        """Parse JSONL log text; rejects unsupported schema versions."""
         lines = [ln for ln in text.splitlines() if ln.strip()]
         if not lines:
             raise ValueError("empty event log")
@@ -172,8 +187,10 @@ class EventReplayer:
 
     @classmethod
     def load(cls, path: Union[str, Path]) -> "EventReplayer":
+        """`loads` over a file on disk."""
         return cls.loads(Path(path).read_text())
 
     def replay(self, bus: EventBus) -> None:
+        """Publish every recorded event onto `bus`, in recorded order."""
         for ev in self.events:
             bus.publish(ev)

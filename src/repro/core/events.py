@@ -44,6 +44,7 @@ class Event:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class InstanceRequested(Event):
+    """Placement chosen for an instance; spin-up begins."""
     instance: Any
 
 
@@ -110,11 +111,50 @@ class ClientReady(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class ClientPreemptionWarning(Event):
+    """The client's tracked instance received its provider's reclaim
+    notice: it will be preempted at `reclaim_at` unless terminated
+    first. The cluster-level translation of
+    `InstancePreemptionWarning`, filtered the same way as
+    `ClientReady`/`ClientLost` — engines never see warnings for
+    instances the cluster no longer tracks."""
+    client: str
+    instance: Any
+    reclaim_at: float
+
+
+@dataclasses.dataclass(frozen=True)
 class ClientLost(Event):
     """The client's tracked instance was preempted (cluster already
     dropped it; the engine decides whether/how to recover)."""
     client: str
     instance: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientCheckpointed(Event):
+    """A preemption-notice-triggered checkpoint landed in cloud storage
+    inside the warning window (engine `on_warning` policy "checkpoint"
+    or "drain"): the client's training state through `progress_s`
+    seconds of the epoch is durable, so a reclaim now only loses work
+    done after the snapshot. `remaining_s` is the epoch time still owed
+    if the client resumes from this snapshot."""
+    client: str
+    round_idx: int
+    progress_s: float
+    remaining_s: float
+    reclaim_at: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientResumedFromCheckpoint(Event):
+    """A replacement instance picked the client's training up from its
+    warning-window checkpoint (rather than re-doing the round
+    contribution from the last periodic checkpoint); the client owes
+    only `remaining_s` seconds of epoch time."""
+    client: str
+    round_idx: int
+    remaining_s: float
 
 
 # ---------------------------------------------------------------------------
@@ -184,8 +224,9 @@ EVENT_TYPES: Dict[str, Type[Event]] = {
     cls.__name__: cls for cls in (
         InstanceRequested, InstanceReady, InstancePreemptionWarning,
         InstancePreempted, InstanceTerminated, BillingTick, ClientReady,
-        ClientLost, RoundStarted, RoundCompleted, ClientStateChanged,
-        BudgetExhausted, RunCompleted,
+        ClientPreemptionWarning, ClientLost, ClientCheckpointed,
+        ClientResumedFromCheckpoint, RoundStarted, RoundCompleted,
+        ClientStateChanged, BudgetExhausted, RunCompleted,
     )
 }
 
@@ -204,6 +245,8 @@ class EventBus:
         self._all: List[Handler] = []
 
     def subscribe(self, etype: Type[Event], handler: Handler) -> Handler:
+        """Call `handler` for every future event of exactly `etype`
+        (no subclass dispatch); returns `handler` for unsubscribing."""
         self._subs[etype].append(handler)
         return handler
 
@@ -214,12 +257,16 @@ class EventBus:
         return handler
 
     def unsubscribe(self, etype: Type[Event], handler: Handler) -> None:
+        """Remove a type-keyed subscription added by `subscribe`."""
         self._subs[etype].remove(handler)
 
     def unsubscribe_all(self, handler: Handler) -> None:
+        """Remove a wildcard subscription added by `subscribe_all`."""
         self._all.remove(handler)
 
     def publish(self, event: Event) -> None:
+        """Synchronously invoke every subscriber (wildcards first,
+        then type-keyed, each in subscription order) before returning."""
         # snapshot: a handler may (un)subscribe while we iterate
         for h in list(self._all):
             h(event)

@@ -30,8 +30,14 @@ from repro.core.estimator import TimeEstimator
 from repro.core.scheduler import FedCostAwareScheduler
 
 
+# valid engine reactions to a provider's preemption-notice warning
+ON_WARNING_MODES = ("ignore", "checkpoint", "drain")
+
+
 @dataclasses.dataclass(frozen=True)
 class Policy:
+    """One Table-I column: which market, lifecycle management, round
+    engine, placement scope and warning reaction a run uses."""
     name: str
     on_demand: bool              # instance market
     manage_lifecycle: bool       # terminate-idle + pre-warm
@@ -44,6 +50,23 @@ class Policy:
     # preserves all existing behavior; `FLRunConfig.cross_provider`
     # overrides it per run.
     cross_provider: bool = True
+    # how engines react to a provider's preemption-notice warning
+    # (`ClientPreemptionWarning`): "ignore" (historical behavior — work
+    # since the last periodic checkpoint is lost on reclaim),
+    # "checkpoint" (snapshot training state inside the notice window,
+    # resume the replacement from it), or "drain" (snapshot, then
+    # proactively terminate and re-request before the reclaim lands).
+    # `FLRunConfig.on_warning` overrides it per run.
+    on_warning: str = "ignore"
+
+    def __post_init__(self):
+        """Reject unknown warning reactions: anything other than the
+        exact "ignore" would otherwise silently take the checkpoint
+        path in the engines."""
+        if self.on_warning not in ON_WARNING_MODES:
+            raise ValueError(
+                f"unknown on_warning mode {self.on_warning!r}; "
+                f"known: {ON_WARNING_MODES}")
 
 
 POLICIES = {
@@ -56,11 +79,14 @@ POLICIES = {
 
 
 def get_policy(name: str) -> Policy:
+    """Look up a registered policy by its Table-I name."""
     return POLICIES[name]
 
 
 def make_scheduler(policy: Policy, sched_cfg: SchedulerConfig,
                    spin_up_prior: float = 150.0) -> FedCostAwareScheduler:
+    """Fresh FedCostAware scheduler (estimator + budget ledger) for a
+    run under `policy`."""
     est = TimeEstimator(sched_cfg.ema_alpha, spin_up_prior)
     ledger = BudgetLedger()
     return FedCostAwareScheduler(sched_cfg, est, ledger)

@@ -1,10 +1,11 @@
 """ClusterManager: instance lifecycle for FL clients.
 
 Sits between the cloud simulator and the round engines. It consumes the
-cloud-level bus events (`InstanceReady`, `InstancePreempted`), filters
-out stale ones (an event for an instance the cluster no longer tracks is
-dropped here, so engines never have to guard against races), and
-re-publishes client-level events (`ClientReady`, `ClientLost`).
+cloud-level bus events (`InstanceReady`, `InstancePreempted`,
+`InstancePreemptionWarning`), filters out stale ones (an event for an
+instance the cluster no longer tracks is dropped here, so engines never
+have to guard against races), and re-publishes client-level events
+(`ClientReady`, `ClientLost`, `ClientPreemptionWarning`).
 
 Owns, per client:
   * the tracked instance (at most one),
@@ -22,13 +23,18 @@ from typing import Any, Dict, Optional
 
 from repro.cloud.simulator import CloudSimulator, Instance
 from repro.common.config import ClientProfile
-from repro.core.events import (ClientLost, ClientReady, ClientStateChanged,
-                               InstancePreempted, InstanceReady)
+from repro.core.events import (ClientLost, ClientPreemptionWarning,
+                               ClientReady, ClientStateChanged,
+                               InstancePreempted,
+                               InstancePreemptionWarning, InstanceReady)
 from repro.core.policies import Policy
 from repro.core.scheduler import FedCostAwareScheduler
 
 
 class ClusterManager:
+    """Per-client instance ownership between the cloud simulator and
+    the round engines (see module docstring)."""
+
     def __init__(self, sim: CloudSimulator, policy: Policy,
                  profiles: Dict[str, ClientProfile],
                  scheduler: FedCostAwareScheduler):
@@ -44,6 +50,8 @@ class ClusterManager:
         self._shutdown = False
         sim.bus.subscribe(InstanceReady, self._on_instance_ready)
         sim.bus.subscribe(InstancePreempted, self._on_instance_preempted)
+        sim.bus.subscribe(InstancePreemptionWarning,
+                          self._on_instance_warning)
 
     # ------------------------------------------------------------------
     # Requests / termination.
@@ -79,6 +87,8 @@ class ClusterManager:
         return [self.sim.market.default_provider]
 
     def terminate(self, client: str) -> Optional[Instance]:
+        """Deliberately stop the client's tracked instance (if any) and
+        untrack it; returns the instance that was terminated."""
         inst = self.instances.get(client)
         if inst is not None:
             self.sim.terminate(inst)
@@ -86,6 +96,7 @@ class ClusterManager:
         return inst
 
     def instance_of(self, client: str) -> Optional[Instance]:
+        """The client's currently tracked instance, or None."""
         return self.instances.get(client)
 
     def shutdown(self):
@@ -96,15 +107,21 @@ class ClusterManager:
     # Freshness (cold/warm) bookkeeping.
     # ------------------------------------------------------------------
     def is_fresh(self, iid: int) -> bool:
+        """Has instance `iid` completed no epoch yet (cold)?"""
         return self._fresh.get(iid, True)
 
     def mark_warm(self, iid: int):
+        """Record that instance `iid` finished an epoch (warm)."""
         self._fresh[iid] = False
 
     # ------------------------------------------------------------------
     # Pre-warming (scheduler decision -> future spin-up).
     # ------------------------------------------------------------------
     def schedule_prewarm(self, client: str, t: float):
+        """Spin the client's next instance up at `t` (the scheduler's
+        `F_s - T_spin_up - T_buffer` target). Re-issuing supersedes the
+        previous pre-warm; a queue entry moved later (§III-D) defers
+        the fire; `shutdown()` cancels all of them."""
         gen = self._prewarm_gen.get(client, 0) + 1
         self._prewarm_gen[client] = gen
 
@@ -141,3 +158,14 @@ class ClusterManager:
             return                              # stale: already replaced
         self.instances[client] = None
         self.sim.bus.publish(ClientLost(ev.t, client, inst))
+
+    def _on_instance_warning(self, ev: InstancePreemptionWarning):
+        """Translate a provider reclaim notice into a client-level
+        warning, filtered like every other cloud event: a warning for
+        an instance the cluster no longer tracks is dropped."""
+        inst = ev.instance
+        cur = self.instances.get(inst.client)
+        if cur is None or cur.iid != inst.iid:
+            return                              # stale: already replaced
+        self.sim.bus.publish(ClientPreemptionWarning(
+            ev.t, inst.client, inst, ev.reclaim_at))

@@ -21,6 +21,8 @@ ENGINES: Dict[str, Type[BaseEngine]] = {
 
 
 def get_engine(name: str) -> Type[BaseEngine]:
+    """Resolve a registry key to an engine class (KeyError lists the
+    known keys)."""
     try:
         return ENGINES[name]
     except KeyError:

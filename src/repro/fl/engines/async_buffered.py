@@ -24,6 +24,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
+from repro.cloud.simulator import RUNNING
 from repro.core.events import ClientLost, ClientReady
 from repro.fl.engines.base import BaseEngine, EngineContext
 
@@ -92,6 +93,14 @@ class AsyncBufferedEngine(BaseEngine):
             self._resumed.add(c)
         self.sim.schedule_in(dur, lambda: self._finish_training(c, iid))
 
+    def _is_training(self, c: str) -> bool:
+        """Mid-epoch iff the client's in-flight task is bound to its
+        currently tracked, RUNNING instance."""
+        iid = self._task.get(c)
+        inst = self.cluster.instance_of(c)
+        return (iid is not None and inst is not None
+                and inst.iid == iid and inst.state == RUNNING)
+
     def _finish_training(self, c: str, iid: int):
         if self._done:
             return
@@ -100,6 +109,7 @@ class AsyncBufferedEngine(BaseEngine):
             return                                  # stale (preempted)
         if c not in self._active:
             return                                  # excluded mid-flight
+        self._warning_ckpt.pop(c, None)     # epoch done: snapshot stale
         t = self.sim.now
         dur = t - self._train_start[c]
         cold = self.cluster.is_fresh(inst.iid)
@@ -195,6 +205,9 @@ class AsyncBufferedEngine(BaseEngine):
         if self._done or c not in self._active:
             return
         if ev.resume_token is not None:
+            if ev.resume_token.get("source") == "warning":
+                self._publish_resumed_from_checkpoint(
+                    c, self._round_idx, ev.resume_token["remaining"])
             self._begin_training(c, cold=True,
                                  duration=ev.resume_token["remaining"])
         elif c in self._pending_dispatch:
@@ -210,10 +223,13 @@ class AsyncBufferedEngine(BaseEngine):
             self._pending_dispatch.add(c)       # re-request on next need
             self.cluster.request(c)
             return
-        # resume from the last periodic checkpoint (§III-D)
-        remaining = self._checkpoint_remaining(
-            c, self._train_start[c], self._train_duration[c])
-        self.cluster.request(c, resume_token={"remaining": remaining})
+        # resume from the best surviving checkpoint: the warning-window
+        # snapshot when the provider's notice let us write one, else
+        # the last periodic checkpoint (§III-D)
+        remaining, source = self._preemption_remaining(c)
+        self._note_lost_work(c, remaining)
+        self.cluster.request(c, resume_token={"remaining": remaining,
+                                              "source": source})
 
     # ------------------------------------------------------------------
     def _finish_run(self):

@@ -3,31 +3,45 @@
 A `RoundEngine` owns the FL-round semantics of a run: when clients are
 dispatched, what constitutes a completed round, and when aggregation
 fires. Engines are driven entirely by client-level bus events
-(`ClientReady`, `ClientLost`) plus the simulator clock — they never talk
-to raw instance callbacks, which is what makes new round disciplines
-(async buffering, straggler cut-offs, hierarchical rounds) addable
-without touching the cloud or cluster layers.
+(`ClientReady`, `ClientLost`, `ClientPreemptionWarning`) plus the
+simulator clock — they never talk to raw instance callbacks, which is
+what makes new round disciplines (async buffering, straggler cut-offs,
+hierarchical rounds) addable without touching the cloud or cluster
+layers.
 
 Contract:
   * `start()` schedules the initial work at t=0; the composition root
     then drains the simulator.
   * `result()` is called after the event heap drains and returns the
     engine's `RunResult`.
+
+Preemption-notice handling (`Policy.on_warning`, docs/events.md) is
+shared here: when a provider's reclaim warning reaches a client that is
+mid-epoch, the engine can snapshot its training state to the checkpoint
+store inside the notice window ("checkpoint"), additionally terminate
+and re-request before the reclaim lands ("drain"), or do nothing
+("ignore", the historical lost-work behavior). Subclasses opt in by
+implementing `_is_training` and maintaining the `_train_start` /
+`_train_duration` bookkeeping both built-in engines already keep.
 """
 from __future__ import annotations
 
 import dataclasses
 import inspect
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.checkpoint import snapshots
+from repro.checkpoint.store import MemoryStore, ObjectStore
 from repro.cloud.accounting import CostAccountant
-from repro.cloud.simulator import CloudSimulator
+from repro.cloud.simulator import RUNNING, CloudSimulator
 from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
                                  SchedulerConfig)
-from repro.core.events import (BudgetExhausted, ClientLost, ClientReady,
+from repro.core.events import (BudgetExhausted, ClientCheckpointed,
+                               ClientLost, ClientPreemptionWarning,
+                               ClientReady, ClientResumedFromCheckpoint,
                                ClientStateChanged, RoundCompleted,
                                RoundStarted)
 from repro.core.policies import Policy
@@ -51,6 +65,7 @@ class EngineContext:
     timeline: TimelineRecorder
     rng: np.random.RandomState
     hooks: Optional[TrainerHooks] = None
+    ckpt_store: Optional[ObjectStore] = None   # None -> private MemoryStore
 
 
 class BaseEngine:
@@ -71,6 +86,7 @@ class BaseEngine:
         self.timeline = ctx.timeline
         self.hooks = ctx.hooks
         self._rng = ctx.rng
+        self.ckpt_store = ctx.ckpt_store or MemoryStore()
         self.profiles: Dict[str, ClientProfile] = {
             c.name: c for c in ctx.run_cfg.clients}
         self.cost_curve: List[dict] = []
@@ -79,13 +95,22 @@ class BaseEngine:
         self._round_idx = -1
         self._done = False
         self._makespan: Optional[float] = None
+        # notice-aware checkpointing state + resilience metrics
+        self._warning_ckpt: Dict[str, dict] = {}   # client -> snapshot
+        self.lost_work_s = 0.0
+        self.n_preemptions = 0
+        self.sim.bus.subscribe(ClientLost, self._count_client_lost)
         self.sim.bus.subscribe(ClientReady, self._on_client_ready)
         self.sim.bus.subscribe(ClientLost, self._on_client_lost)
+        self.sim.bus.subscribe(ClientPreemptionWarning,
+                               self._on_client_warning)
 
     # ------------------------------------------------------------------
     # Round discipline (subclass responsibility).
     # ------------------------------------------------------------------
     def start(self):
+        """Schedule the engine's initial work at t=0; the composition
+        root then drains the simulator."""
         raise NotImplementedError
 
     def _on_client_ready(self, ev: ClientReady):
@@ -93,6 +118,14 @@ class BaseEngine:
 
     def _on_client_lost(self, ev: ClientLost):
         raise NotImplementedError
+
+    def _is_training(self, c: str) -> bool:
+        """Is `c` mid-epoch on a RUNNING instance right now? Gates the
+        preemption-warning path; engines that keep the shared
+        `_train_start`/`_train_duration` bookkeeping override this.
+        The conservative default opts an engine out of notice-aware
+        checkpointing entirely (warnings no-op)."""
+        return False
 
     # ------------------------------------------------------------------
     # Shared helpers.
@@ -111,6 +144,119 @@ class BaseEngine:
         ck = self.sched_cfg.checkpoint_every_s
         preserved = math.floor(elapsed / ck) * ck
         return max(train_duration - preserved, 1.0)
+
+    # ------------------------------------------------------------------
+    # Preemption-notice handling (shared across engines).
+    # ------------------------------------------------------------------
+    def _on_client_warning(self, ev: ClientPreemptionWarning):
+        """Provider reclaim notice for a tracked client. Under the
+        "checkpoint"/"drain" policies, start writing a training-state
+        snapshot if (a) the client is actually mid-epoch and (b) the
+        write can finish inside the notice window; otherwise the
+        warning is informational and the reclaim falls back to
+        periodic-checkpoint (lost-work) semantics."""
+        mode = self.policy.on_warning
+        if mode == "ignore" or self._done:
+            return
+        c = ev.client
+        inst = self.cluster.instance_of(c)
+        if inst is None or inst.iid != ev.instance.iid:
+            return                              # stale: already replaced
+        if not self._is_training(c):
+            return                              # idle/pre-warmed: no state
+        write_s = self.sched_cfg.warning_ckpt_write_s
+        if ev.reclaim_at - self.sim.now + 1e-9 < write_s:
+            return      # window too short: checkpoint cannot land
+        # the snapshot captures progress at write *start*; work done
+        # during the write itself is not in it (and is lost on reclaim)
+        epoch_started = self._train_start[c]
+        progress_s = self.sim.now - epoch_started
+        self.sim.schedule_in(write_s, lambda: (
+            self._complete_warning_checkpoint(c, ev.instance, mode,
+                                              ev.reclaim_at, progress_s,
+                                              epoch_started)))
+
+    def _complete_warning_checkpoint(self, c: str, inst, mode: str,
+                                     reclaim_at: float, progress_s: float,
+                                     epoch_started: float):
+        """The notice-triggered snapshot finished writing: persist it,
+        publish `ClientCheckpointed`, and under "drain" proactively
+        vacate the instance. A no-op when the world moved on during the
+        write (instance terminated/preempted, epoch finished — or a new
+        epoch began on the same warm instance, which `epoch_started`
+        detects: pairing the old epoch's progress with the new epoch's
+        duration would make the resume skip unperformed work)."""
+        if self._done:
+            return
+        cur = self.cluster.instance_of(c)
+        if cur is None or cur.iid != inst.iid or cur.state != RUNNING:
+            return          # terminated or reclaimed during the write
+        if not self._is_training(c):
+            return          # epoch finished inside the write window
+        if self._train_start[c] != epoch_started:
+            return          # a different epoch is running now
+        r = self._round_idx
+        remaining = max(self._train_duration[c] - progress_s, 1.0)
+        payload = {"client": c, "round": r, "remaining": remaining,
+                   "progress": progress_s, "t": self.sim.now}
+        snapshots.save_snapshot(self.ckpt_store, c, payload)
+        self._warning_ckpt[c] = payload
+        self.sim.bus.publish(ClientCheckpointed(
+            self.sim.now, c, r, progress_s, remaining, reclaim_at))
+        if mode == "drain":
+            self._drain_after_checkpoint(c, remaining)
+
+    def _drain_after_checkpoint(self, c: str, remaining: float):
+        """"drain": the snapshot is durable, so stop paying for a
+        doomed instance — terminate it now (billing closes at the
+        warning, not the reclaim) and immediately request the
+        replacement with a resume token, giving its spin-up a head
+        start on the reclaim."""
+        # work done during the snapshot write is redone after resume
+        self._note_lost_work(c, remaining)
+        self._warning_ckpt.pop(c, None)     # consumed by this resume
+        self.cluster.terminate(c)
+        self.cluster.request(c, resume_token={
+            "round": self._round_idx, "remaining": remaining,
+            "source": "warning"})
+
+    def _preemption_remaining(self, c: str) -> Tuple[float, str]:
+        """Epoch time still owed after a reclaim, from the best
+        surviving checkpoint: the warning-window snapshot when it
+        preserves more than the last periodic checkpoint (coarse
+        `checkpoint_every_s` cadences are where the notice pays off),
+        else the periodic one. Returns `(remaining_s, source)` with
+        source "warning" | "periodic"."""
+        periodic = self._checkpoint_remaining(
+            c, self._train_start[c], self._train_duration[c])
+        snap = self._warning_ckpt.pop(c, None)
+        if snap is not None:
+            stored = snapshots.load_snapshot(self.ckpt_store, c) or snap
+            warn_remaining = float(stored["remaining"])
+            if warn_remaining < periodic:
+                return warn_remaining, "warning"
+        return periodic, "periodic"
+
+    def _note_lost_work(self, c: str, remaining: float):
+        """Account the client-seconds of training that must be redone:
+        time spent this epoch minus what the surviving checkpoint
+        preserves."""
+        elapsed = max(self.sim.now - self._train_start[c], 0.0)
+        preserved = max(self._train_duration[c] - remaining, 0.0)
+        self.lost_work_s += max(elapsed - preserved, 0.0)
+
+    def _count_client_lost(self, ev: ClientLost):
+        """Every cluster-filtered `ClientLost` is a real spot reclaim
+        of a tracked instance; count it for `RunResult.n_preemptions`."""
+        self.n_preemptions += 1
+
+    def _publish_resumed_from_checkpoint(self, c: str, r: int,
+                                         remaining: float):
+        """Telemetry for a resume that starts from a warning-window
+        snapshot (periodic-checkpoint resumes stay un-evented to keep
+        default streams unchanged)."""
+        self.sim.bus.publish(ClientResumedFromCheckpoint(
+            self.sim.now, c, r, remaining))
 
     def _call_aggregate(self, participants: List[str], round_idx: int,
                         staleness: Optional[Dict[str, int]] = None):
@@ -181,6 +327,7 @@ class BaseEngine:
 
     # ------------------------------------------------------------------
     def result(self) -> RunResult:
+        """Assemble the engine's `RunResult` after the heap drains."""
         return RunResult(
             total_cost=self.accountant.total_cost(),
             per_client_cost={c: self.accountant.client_cost(c)
@@ -191,4 +338,6 @@ class BaseEngine:
             cost_curve=self.cost_curve,
             rounds_completed=self._round_idx + 1,
             excluded_clients=list(self.excluded),
-            per_round_participants=self.per_round_participants)
+            per_round_participants=self.per_round_participants,
+            lost_work_s=self.lost_work_s,
+            n_preemptions=self.n_preemptions)

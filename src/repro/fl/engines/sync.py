@@ -107,6 +107,14 @@ class SyncEngine(BaseEngine):
         else:
             self._mark(c, "idle")  # pre-warmed, waits for next round
 
+    def _is_training(self, c: str) -> bool:
+        """Mid-epoch iff the round still owes `c` a result and its
+        tracked instance is RUNNING (a resuming client's replacement is
+        still SPINNING_UP, an aggregated client left `_round_pending`)."""
+        inst = self.cluster.instance_of(c)
+        return (c in self._round_pending and c in self._train_start
+                and inst is not None and inst.state == RUNNING)
+
     # ------------------------------------------------------------------
     # Local training execution (simulated duration; real JAX via hooks).
     # ------------------------------------------------------------------
@@ -125,6 +133,7 @@ class SyncEngine(BaseEngine):
             return                                  # stale (preempted)
         if c not in self._round_pending:
             return
+        self._warning_ckpt.pop(c, None)     # epoch done: snapshot stale
         t = self.sim.now
         dur = t - self._train_start[c]
         cold = self.cluster.is_fresh(inst.iid)
@@ -170,22 +179,38 @@ class SyncEngine(BaseEngine):
             # idle / pre-warmed instance lost: next dispatch re-requests
             self._mark(c, "savings")
             return
-        # Progress up to the last periodic checkpoint survives (§III-D):
-        # the client reloads from cloud storage and resumes mid-epoch.
-        remaining = self._checkpoint_remaining(
-            c, self._train_start[c], self._train_duration[c])
+        # Progress up to the best surviving checkpoint survives: the
+        # warning-window snapshot when the provider's notice let us
+        # write one (§III-D fault tolerance + notice-aware extension),
+        # else the last periodic checkpoint. The client reloads from
+        # cloud storage and resumes mid-epoch.
+        remaining, source = self._preemption_remaining(c)
+        self._note_lost_work(c, remaining)
         r = self._round_idx
         self.cluster.request(
-            c, resume_token={"round": r, "remaining": remaining})
-        # §III-D dynamic schedule adjustment: push back pre-warm targets of
-        # already-terminated clients so they stay off while this client
-        # recovers; each moved spin-up event is rescheduled.
+            c, resume_token={"round": r, "remaining": remaining,
+                             "source": source})
+        self._adjust_schedule_for_recovery(c, remaining)
+
+    def _adjust_schedule_for_recovery(self, c: str, remaining: float):
+        """§III-D dynamic schedule adjustment: push back pre-warm
+        targets of already-terminated clients so they stay off while
+        `c` recovers; each moved spin-up event is rescheduled."""
         spin_est = self.scheduler.est.model(c).spin_up.get(
             self.cloud_cfg.spin_up_mean_s)
         recovery_finish = self.sim.now + spin_est + remaining
         moved = self.scheduler.on_preemption_recovery(c, recovery_finish)
         for other, new_t in moved.items():
             self.cluster.schedule_prewarm(other, new_t)
+
+    def _drain_after_checkpoint(self, c: str, remaining: float):
+        """Drain vacates the instance and re-requests immediately —
+        the same recovery shape as a reclaim, so the peers' pre-warm
+        targets move by the same §III-D adjustment (otherwise they
+        would spin up at their original targets and idle at the
+        barrier while `c` redoes `remaining` seconds)."""
+        super()._drain_after_checkpoint(c, remaining)
+        self._adjust_schedule_for_recovery(c, remaining)
 
     def _resume(self, c: str, ev: ClientReady):
         tok = ev.resume_token
@@ -195,6 +220,9 @@ class SyncEngine(BaseEngine):
         self._resumed.add(c)
         self._train_start[c] = self.sim.now
         self._train_duration[c] = remaining
+        if tok.get("source") == "warning":
+            self._publish_resumed_from_checkpoint(
+                c, self._round_idx, remaining)
         self._mark(c, "training")
         r = self._round_idx
         iid = ev.instance.iid

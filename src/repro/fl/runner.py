@@ -40,6 +40,7 @@ from typing import Optional, Union
 
 import numpy as np
 
+from repro.checkpoint.store import MemoryStore, ObjectStore
 from repro.cloud.accounting import CostAccountant
 from repro.cloud.simulator import CloudSimulator
 from repro.common.config import CloudConfig, FLRunConfig, SchedulerConfig
@@ -55,13 +56,18 @@ __all__ = ["FLCloudRunner", "RunResult", "Segment", "TrainerHooks"]
 
 
 class FLCloudRunner:
+    """Compose a full FL-on-cloud run and execute it (see module
+    docstring for the layer map; docs/architecture.md for the long
+    form)."""
+
     def __init__(self, run_cfg: FLRunConfig,
                  cloud_cfg: Optional[CloudConfig] = None,
                  sched_cfg: Optional[SchedulerConfig] = None,
                  hooks: Optional[TrainerHooks] = None,
                  seed: Optional[int] = None,
                  record_to: Optional[Union[str, Path]] = None,
-                 record: bool = False):
+                 record: bool = False,
+                 ckpt_store: Optional[ObjectStore] = None):
         self.run_cfg = run_cfg
         self.cloud_cfg = cloud_cfg or CloudConfig()
         self.sched_cfg = sched_cfg or SchedulerConfig()
@@ -69,8 +75,15 @@ class FLCloudRunner:
         if run_cfg.cross_provider is not None:
             self.policy = dataclasses.replace(
                 self.policy, cross_provider=run_cfg.cross_provider)
+        if run_cfg.on_warning is not None:
+            self.policy = dataclasses.replace(
+                self.policy, on_warning=run_cfg.on_warning)
         seed = run_cfg.seed if seed is None else seed
         self.record_to = record_to
+        # the simulated S3: warning-window client snapshots land here
+        # (checkpoint.snapshots); callers may pass a FileStore to keep
+        # them on disk
+        self.ckpt_store = ckpt_store or MemoryStore()
 
         # layer wiring — construction order fixes bus subscription order:
         # the recorder (wildcard) sees everything first, accounting sees
@@ -104,10 +117,14 @@ class FLCloudRunner:
             sched_cfg=self.sched_cfg, policy=self.policy, sim=self.sim,
             cluster=self.cluster, scheduler=self.scheduler,
             accountant=self.accountant, timeline=self.timeline,
-            rng=np.random.RandomState(seed + 101), hooks=hooks))
+            rng=np.random.RandomState(seed + 101), hooks=hooks,
+            ckpt_store=self.ckpt_store))
 
     # ------------------------------------------------------------------
     def run(self) -> RunResult:
+        """Execute the run to completion: start the engine, drain the
+        simulator, publish the terminal `RunCompleted` summary, persist
+        the event log if requested, and return the `RunResult`."""
         self.engine.start()
         self.sim.run_until_idle()
         self.timeline.close(self.sim.now)   # no-op on complete runs

@@ -29,6 +29,7 @@ from repro.core.events import (ClientStateChanged, EventBus, RoundCompleted,
 
 @dataclasses.dataclass
 class Segment:
+    """One closed span of a client's Fig-4 operational state."""
     client: str
     state: str          # spinup | training | idle | savings
     t0: float
@@ -48,6 +49,8 @@ class TimelineRecorder:
         self.mark(ev.client, ev.state, ev.t)
 
     def mark(self, client: str, state: str, t: float):
+        """Close the client's open segment at `t` and open `state`
+        ("done" closes without opening)."""
         for seg in reversed(self.segments):
             if seg.client == client and seg.t1 < 0:
                 seg.t1 = t

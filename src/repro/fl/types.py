@@ -15,6 +15,8 @@ class TrainerHooks:
     """Optional attachment for real model training."""
 
     def run_local(self, client: str, round_idx: int) -> None:  # pragma: no cover
+        """Execute the client's local training for `round_idx` (called
+        at the simulated completion instant of the epoch)."""
         pass
 
     def aggregate(self, participants: List[str], round_idx: int,
@@ -35,6 +37,7 @@ class TrainerHooks:
 
 @dataclasses.dataclass
 class RunResult:
+    """Everything a finished (or replayed) run reports."""
     total_cost: float
     per_client_cost: Dict[str, float]
     makespan_s: float
@@ -43,3 +46,10 @@ class RunResult:
     rounds_completed: int
     excluded_clients: List[str]
     per_round_participants: List[List[str]]
+    # preemption-resilience metrics (live runs only; replayed results
+    # keep the defaults — the event log does not record lost work):
+    # client-seconds of training redone because a reclaim landed after
+    # the last surviving checkpoint, and how many tracked instances the
+    # spot market took (deliberate drain terminations not included)
+    lost_work_s: float = 0.0
+    n_preemptions: int = 0

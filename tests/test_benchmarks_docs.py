@@ -1,0 +1,55 @@
+"""benchmarks/README.md must stay in sync with the scripts' `--help`
+output: every flag an argparse-driven benchmark advertises has to be
+documented, and every benchmark module has to have a section.
+"""
+import contextlib
+import io
+import importlib
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+README = (REPO / "benchmarks" / "README.md").read_text()
+
+# every script that parses flags via argparse main(argv)
+ARGPARSE_SCRIPTS = ["table1", "fig4_timeline", "fig5_costs", "multicloud",
+                    "preemption_realism"]
+_FLAG = re.compile(r"(--[a-z][a-z0-9-]*)")
+
+
+def help_text(script: str) -> str:
+    """Capture `python -m benchmarks.<script> --help` in-process."""
+    mod = importlib.import_module(f"benchmarks.{script}")
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf), pytest.raises(SystemExit):
+        mod.main(["--help"])
+    return buf.getvalue()
+
+
+class TestFlagsDocumented:
+    @pytest.mark.parametrize("script", ARGPARSE_SCRIPTS)
+    def test_every_help_flag_appears_in_readme(self, script):
+        flags = set(_FLAG.findall(help_text(script))) - {"--help"}
+        assert flags, f"{script} --help advertised no flags?"
+        missing = sorted(f for f in flags if f"`{f}" not in README)
+        assert not missing, (
+            f"benchmarks/README.md does not document {script} "
+            f"flag(s): {missing}")
+
+    @pytest.mark.parametrize("script", ARGPARSE_SCRIPTS)
+    def test_script_has_a_section(self, script):
+        assert f"## {script}" in README
+
+
+class TestEveryScriptMentioned:
+    def test_all_benchmark_modules_appear(self):
+        scripts = sorted(p.stem for p in (REPO / "benchmarks").glob("*.py")
+                         if p.stem != "__init__")
+        missing = [s for s in scripts if s not in README]
+        assert not missing, (
+            f"benchmarks/README.md is missing section(s) for: {missing}")

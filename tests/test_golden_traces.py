@@ -32,6 +32,7 @@ from repro.fl.telemetry import replay_result, state_totals
 
 GOLDEN_DIR = Path(__file__).parent / "golden"
 GOLDEN_V1_DIR = GOLDEN_DIR / "v1"
+GOLDEN_V2_DIR = GOLDEN_DIR / "v2"
 FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
 
 CLOUD = CloudConfig(spot_rate_sigma=0.0)
@@ -289,11 +290,11 @@ class TestSchemaV1Compat:
 
     @pytest.mark.parametrize("policy", POLICIES)
     def test_v1_and_v2_streams_are_equivalent(self, policy):
-        """Field-for-field: the regenerated v2 golden differs from its
+        """Field-for-field: the archived v2 golden differs from its
         v1 ancestor only by the schema bump and the provider key each
         instance snapshot gained."""
         h1, recs1 = load_golden(f"v1/golden__{policy}")
-        h2, recs2 = load_golden(f"golden__{policy}")
+        h2, recs2 = load_golden(f"v2/golden__{policy}")
         assert h1["schema"] == 1 and h2["schema"] == 2
         assert {k: v for k, v in h1.items() if k != "schema"} == \
             {k: v for k, v in h2.items() if k != "schema"}
@@ -307,7 +308,44 @@ class TestSchemaV1Compat:
 
 
 # ---------------------------------------------------------------------------
-# Fixture regeneration (documented in README).
+# v2 -> v3 compat: the checkpoint-vocabulary bump is purely additive
+# (new event types only), so archived schema-2 recordings must replay
+# unchanged and differ from the regenerated v3 goldens by the header
+# alone.
+# ---------------------------------------------------------------------------
+class TestSchemaV2Compat:
+    V2_TRACES = TRACES + (FED_ISIC_TRACE,)
+
+    @pytest.mark.parametrize("name", V2_TRACES)
+    def test_v2_trace_loads(self, name):
+        rep = EventReplayer.load(GOLDEN_V2_DIR / f"{name}.events.jsonl")
+        assert rep.header["schema"] == 2
+
+    @pytest.mark.parametrize("trace", TRACES)
+    def test_v2_replay_matches_pinned_totals(self, trace):
+        rep = replay_result(GOLDEN_V2_DIR / f"{trace}.events.jsonl")
+        want = GOLDEN_TOTALS[trace]
+        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
+        for c, v in want["per_client"].items():
+            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
+
+    @pytest.mark.parametrize("name", V2_TRACES)
+    def test_v2_and_v3_streams_are_equivalent(self, name):
+        """The default path publishes none of the new v3 events, so the
+        regenerated goldens carry identical event bodies — only the
+        header's schema field moved."""
+        h2, recs2 = load_golden(f"v2/{name}")
+        h3, recs3 = load_golden(name)
+        assert h2["schema"] == 2 and h3["schema"] == 3
+        assert {k: v for k, v in h2.items() if k != "schema"} == \
+            {k: v for k, v in h3.items() if k != "schema"}
+        assert len(recs2) == len(recs3)
+        for r2, r3 in zip(recs2, recs3):
+            assert_json_equal(r3, r2)
+
+
+# ---------------------------------------------------------------------------
+# Fixture regeneration (documented in docs/events.md).
 # ---------------------------------------------------------------------------
 def regenerate():
     # run everything first, write fixtures only once all runs succeeded

@@ -1,0 +1,464 @@
+"""Preemption-realism subsystem tests: the pluggable reclaim models
+(`repro.cloud.preemption`), recorded-interruption ingestion
+(`repro.cloud.traces`), and the engines' notice-aware checkpointing
+path — including the warning-window edge cases:
+
+  * warning published, then the instance is terminated before the
+    reclaim lands -> the reclaim is a no-op;
+  * a zero-notice provider never publishes a warning, so "checkpoint"
+    engines silently degrade to lost-work semantics;
+  * a notice window too short for the checkpoint write falls back to
+    periodic-checkpoint (lost-work) semantics.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import snapshots
+from repro.checkpoint.store import MemoryStore
+from repro.cloud.preemption import (ConstantRateModel, PriceCoupledModel,
+                                    ReplayInterruptionModel,
+                                    build_preemption_model)
+from repro.cloud.pricing import SpotMarket, TracePriceSource, Zone, Provider
+from repro.cloud.simulator import RUNNING, CloudSimulator
+from repro.cloud.traces import (TraceFormatError,
+                                build_interruption_schedule,
+                                is_interruption_trace,
+                                parse_interruption_file, validate_dir)
+from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
+                                 MarketConfig, ProviderConfig,
+                                 SchedulerConfig)
+from repro.core.eventlog import decode_event, encode_event
+from repro.core.events import (ClientCheckpointed, ClientLost,
+                               ClientPreemptionWarning,
+                               ClientResumedFromCheckpoint,
+                               InstancePreempted,
+                               InstancePreemptionWarning)
+from repro.fl.runner import FLCloudRunner
+
+from pathlib import Path
+
+FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
+
+
+def flat_market(notice_s=0.0, sensitivity=1.0):
+    """One provider, one zone, constant price 0.40."""
+    m = SpotMarket([Provider("p", on_demand_rate=1.0,
+                             preemption_notice_s=notice_s,
+                             preemption_price_sensitivity=sensitivity)])
+    m.add_zone(Zone("z1", "r1", "p"),
+               TracePriceSource([0.0], [0.40]))
+    return m
+
+
+class FakeInst:
+    def __init__(self, zone="z1", provider="p"):
+        self.zone, self.provider = zone, provider
+
+
+# ---------------------------------------------------------------------------
+# Models.
+# ---------------------------------------------------------------------------
+class TestConstantRateModel:
+    def test_zero_rate_is_never_and_draws_nothing(self):
+        rng = np.random.RandomState(0)
+        before = rng.get_state()[1].copy()
+        assert ConstantRateModel(0.0).next_preemption_delay(
+            FakeInst(), 0.0, rng) is None
+        assert np.array_equal(rng.get_state()[1], before)
+
+    def test_matches_legacy_inline_draw(self):
+        """Exact arithmetic of the pre-model code: one exponential at
+        1 / (rate_per_hr / 3600)."""
+        d = ConstantRateModel(2.0).next_preemption_delay(
+            FakeInst(), 0.0, np.random.RandomState(7))
+        want = float(np.random.RandomState(7).exponential(
+            1.0 / (2.0 / 3600.0)))
+        assert d == want
+
+
+class TestPriceCoupledModel:
+    def _spiky_market(self, s=5.0):
+        m = SpotMarket([Provider("p", on_demand_rate=1.0,
+                                 preemption_price_sensitivity=s)])
+        # 0.30 base with a 0.90 spike in [1000, 2000)
+        m.add_zone(Zone("z1", "r1", "p"),
+                   TracePriceSource([0.0, 1000.0, 2000.0],
+                                    [0.30, 0.90, 0.30]))
+        return m
+
+    def test_hazard_scales_with_price(self):
+        # s=1: hazard is directly proportional to the price level
+        # (mean price over the horizon is 0.60: half base, half spike)
+        model = PriceCoupledModel(self._spiky_market(s=1.0), 1.0)
+        low = model.hazard("p", "z1", 500.0)
+        high = model.hazard("p", "z1", 1500.0)
+        assert high > low > 0.0
+        assert high / low == pytest.approx(3.0)   # 0.90 vs 0.30
+
+    def test_zero_sensitivity_decouples(self):
+        model = PriceCoupledModel(self._spiky_market(s=0.0), 1.0)
+        base = 1.0 / 3600.0
+        assert model.hazard("p", "z1", 500.0) == pytest.approx(base)
+        assert model.hazard("p", "z1", 1500.0) == pytest.approx(base)
+
+    def test_hazard_clamped_at_zero(self):
+        # huge sensitivity + below-reference price -> clamp, not negative
+        model = PriceCoupledModel(self._spiky_market(s=100.0), 1.0)
+        assert model.hazard("p", "z1", 500.0) == 0.0
+
+    def test_zero_base_rate_never_preempts(self):
+        model = PriceCoupledModel(self._spiky_market(), 0.0)
+        assert model.next_preemption_delay(
+            FakeInst(), 0.0, np.random.RandomState(0)) is None
+
+    def test_delays_are_deterministic_per_seed(self):
+        model = PriceCoupledModel(self._spiky_market(), 5.0)
+        a = model.next_preemption_delay(FakeInst(), 0.0,
+                                        np.random.RandomState(3))
+        b = model.next_preemption_delay(FakeInst(), 0.0,
+                                        np.random.RandomState(3))
+        assert a == b and a is not None
+
+
+class TestReplayInterruptionModel:
+    def _market(self):
+        m = flat_market()
+        m.add_interruptions("p", "z1", [3000.0, 1000.0])  # any order
+        return m
+
+    def test_next_recorded_time(self):
+        model = ReplayInterruptionModel(self._market())
+        assert model.next_preemption_delay(
+            FakeInst(), 0.0, None) == 1000.0
+        assert model.next_preemption_delay(
+            FakeInst(), 1500.0, None) == 1500.0   # 3000 - 1500
+
+    def test_strictly_after_now(self):
+        """An instance becoming ready at the reclaim instant survives
+        it (the reclaim already happened)."""
+        model = ReplayInterruptionModel(self._market())
+        assert model.next_preemption_delay(
+            FakeInst(), 1000.0, None) == 2000.0
+
+    def test_exhausted_schedule_is_never(self):
+        model = ReplayInterruptionModel(self._market())
+        assert model.next_preemption_delay(
+            FakeInst(), 5000.0, None) is None
+
+    def test_zone_without_schedule_is_never(self):
+        model = ReplayInterruptionModel(flat_market())
+        assert model.next_preemption_delay(
+            FakeInst(), 0.0, None) is None
+
+
+class TestBuildModel:
+    def test_registry(self):
+        m = flat_market()
+        assert isinstance(build_preemption_model(
+            CloudConfig(preemption_model="constant"), m),
+            ConstantRateModel)
+        assert isinstance(build_preemption_model(
+            CloudConfig(preemption_model="price_coupled"), m),
+            PriceCoupledModel)
+        assert isinstance(build_preemption_model(
+            CloudConfig(preemption_model="replay"), m),
+            ReplayInterruptionModel)
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(ValueError, match="unknown preemption model"):
+            build_preemption_model(
+                CloudConfig(preemption_model="nope"), flat_market())
+
+
+# ---------------------------------------------------------------------------
+# Interruption-trace ingestion.
+# ---------------------------------------------------------------------------
+class TestInterruptionTraces:
+    def test_parse_fixture(self):
+        recs = parse_interruption_file(
+            FIXTURE_PRICES / "aws.interruptions.csv")
+        assert len(recs) == 3
+        assert recs[0].zone == "us-east-1a"
+
+    def test_schedule_uses_market_epoch(self):
+        recs = parse_interruption_file(
+            FIXTURE_PRICES / "aws.interruptions.csv")
+        # aws.csv's earliest record is 2024-03-01T00:00:00Z; the first
+        # recorded reclaim is 11m40s after it
+        epoch = min(r.timestamp for r in recs) - 700.0
+        sched = build_interruption_schedule(recs, epoch=epoch)
+        assert sched["us-east-1a"][0] == pytest.approx(700.0)
+
+    def test_jsonl_parses(self, tmp_path):
+        p = tmp_path / "x.interruptions.jsonl"
+        p.write_text('{"Timestamp": "2024-03-01T00:00:10Z", '
+                     '"AvailabilityZone": "za", '
+                     '"InstanceType": "g5.xlarge"}\n')
+        recs = parse_interruption_file(p)
+        assert len(recs) == 1 and recs[0].zone == "za"
+
+    def test_malformed_row_raises_with_location(self, tmp_path):
+        p = tmp_path / "bad.interruptions.csv"
+        p.write_text("Timestamp,AvailabilityZone,InstanceType\n"
+                     "not-a-time,za,g5.xlarge\n")
+        with pytest.raises(TraceFormatError, match="bad.interruptions"
+                                                  ".csv:2"):
+            parse_interruption_file(p)
+
+    def test_naming_convention(self):
+        assert is_interruption_trace("aws.interruptions.csv")
+        assert is_interruption_trace("x/y/gcp.interruptions.jsonl")
+        assert not is_interruption_trace("aws.csv")
+
+    def test_validate_dir_routes_both_kinds(self):
+        lines = validate_dir(FIXTURE_PRICES)
+        assert any("interruptions" in ln for ln in lines)
+        assert any("span" in ln for ln in lines)
+
+    def test_market_config_loads_interruptions(self):
+        market = SpotMarket.from_market_config(MarketConfig(providers=(
+            ProviderConfig(
+                name="aws",
+                price_trace=str(FIXTURE_PRICES / "aws.csv"),
+                interruption_trace=str(
+                    FIXTURE_PRICES / "aws.interruptions.csv")),)))
+        assert market.interruptions[("aws", "us-east-1a")] == \
+            (700.0, 30000.0)
+        assert market.interruptions[("aws", "us-east-1b")] == (20000.0,)
+
+
+# ---------------------------------------------------------------------------
+# Simulator-level edge cases.
+# ---------------------------------------------------------------------------
+def notice_cloud(notice_s=120.0, rate=50.0, model="constant"):
+    return CloudConfig(
+        spot_rate_sigma=0.0, spin_up_sigma=0.0, preemption_rate_per_hr=rate,
+        preemption_model=model,
+        market=MarketConfig(providers=(ProviderConfig(
+            name="aws", spot_rate_sigma=0.0, n_zones=1,
+            preemption_notice_s=notice_s),)))
+
+
+class TestWarningEdgeCasesSimulator:
+    def test_terminate_after_warning_makes_reclaim_noop(self):
+        sim = CloudSimulator(notice_cloud(), seed=1)
+        warns, reclaims = [], []
+        sim.bus.subscribe(InstancePreemptionWarning, warns.append)
+        sim.bus.subscribe(InstancePreempted, reclaims.append)
+        inst = sim.request_instance("c")
+        # stop exactly at the warning, act on it, then drain fully
+        sim.run_until_idle(t_max=0.0)
+        while not warns:
+            t = sim._heap[0][0]
+            sim.run_until_idle(t_max=t)
+        sim.terminate(inst)
+        sim.run_until_idle()
+        assert len(warns) == 1 and reclaims == []
+        assert inst.state == "terminated"
+        assert inst.cost > 0.0                  # billed exactly once
+
+    def test_replay_model_preempts_at_recorded_time(self):
+        cloud = CloudConfig(
+            spot_rate_sigma=0.0, spin_up_sigma=0.0,
+            preemption_model="replay",
+            market=MarketConfig(providers=(ProviderConfig(
+                name="aws",
+                price_trace=str(FIXTURE_PRICES / "aws.csv"),
+                interruption_trace=str(
+                    FIXTURE_PRICES / "aws.interruptions.csv")),)))
+        sim = CloudSimulator(cloud, seed=0)
+        hits = []
+        sim.bus.subscribe(InstancePreempted, hits.append)
+        sim.request_instance("c", zone="us-east-1a")
+        sim.run_until_idle(t_max=3600.0)
+        assert len(hits) == 1
+        assert hits[0].t == pytest.approx(700.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level notice handling.
+# ---------------------------------------------------------------------------
+CLIENTS = (ClientProfile("a", mean_epoch_s=900.0, jitter=0.0,
+                         cold_multiplier=1.0, zone="us-east-1a"),)
+SCHED = SchedulerConfig(checkpoint_every_s=600.0,
+                        warning_ckpt_write_s=10.0)
+
+
+def replay_cloud(notice_s):
+    """aws.csv market + the recorded reclaim at t=700 (mid-epoch: spin
+    up at 150, training to 1050)."""
+    return CloudConfig(
+        spot_rate_sigma=0.0, spin_up_sigma=0.0, preemption_model="replay",
+        market=MarketConfig(providers=(ProviderConfig(
+            name="aws", preemption_notice_s=notice_s,
+            price_trace=str(FIXTURE_PRICES / "aws.csv"),
+            interruption_trace=str(
+                FIXTURE_PRICES / "aws.interruptions.csv")),)))
+
+
+def run_notice(mode, notice_s=120.0, policy="spot", n_epochs=2):
+    cfg = FLRunConfig(dataset="t", clients=CLIENTS, n_epochs=n_epochs,
+                      policy=policy, seed=0, on_warning=mode)
+    runner = FLCloudRunner(cfg, cloud_cfg=replay_cloud(notice_s),
+                           sched_cfg=SCHED)
+    seen = {"warn": [], "ckpt": [], "resume": [], "lost": []}
+    runner.bus.subscribe(ClientPreemptionWarning, seen["warn"].append)
+    runner.bus.subscribe(ClientCheckpointed, seen["ckpt"].append)
+    runner.bus.subscribe(ClientResumedFromCheckpoint,
+                         seen["resume"].append)
+    runner.bus.subscribe(ClientLost, seen["lost"].append)
+    res = runner.run()
+    return res, seen, runner
+
+
+class TestNoticeAwareEngines:
+    def test_ignore_loses_work_since_periodic_checkpoint(self):
+        res, seen, _ = run_notice("ignore")
+        assert len(seen["lost"]) == 1 and not seen["ckpt"]
+        # reclaim at 700, training started at 150 -> 550 elapsed, and
+        # the 600 s periodic cadence preserved nothing
+        assert res.lost_work_s == pytest.approx(550.0)
+        assert res.rounds_completed == 2
+
+    def test_checkpoint_resumes_from_warning_snapshot(self):
+        res, seen, _ = run_notice("checkpoint")
+        assert len(seen["ckpt"]) == 1 and len(seen["resume"]) == 1
+        ck = seen["ckpt"][0]
+        # warning at 580 = 430 into the epoch; 470 owed after resume
+        assert ck.progress_s == pytest.approx(430.0)
+        assert ck.remaining_s == pytest.approx(470.0)
+        assert seen["resume"][0].remaining_s == pytest.approx(470.0)
+        # only the write-window work (and nothing else) is redone
+        assert res.lost_work_s == pytest.approx(120.0)
+        assert res.rounds_completed == 2
+
+    def test_checkpoint_beats_ignore_on_cost_and_lost_work(self):
+        ign, _, _ = run_notice("ignore")
+        ck, _, _ = run_notice("checkpoint")
+        assert ck.lost_work_s < ign.lost_work_s
+        assert ck.total_cost < ign.total_cost
+
+    def test_drain_terminates_before_reclaim(self):
+        res, seen, _ = run_notice("drain")
+        assert len(seen["ckpt"]) == 1 and len(seen["resume"]) == 1
+        assert seen["lost"] == []               # reclaim found nothing
+        assert res.n_preemptions == 0
+        assert res.lost_work_s == pytest.approx(10.0)  # the write window
+        assert res.rounds_completed == 2
+
+    def test_zero_notice_provider_never_warns(self):
+        res, seen, _ = run_notice("checkpoint", notice_s=0.0)
+        assert seen["warn"] == [] and seen["ckpt"] == []
+        # degrades to exactly the lost-work semantics
+        assert res.lost_work_s == pytest.approx(550.0)
+        assert res.rounds_completed == 2
+
+    def test_window_too_short_falls_back_to_lost_work(self):
+        # 5 s notice < 10 s write: warning fires but no snapshot lands
+        res, seen, _ = run_notice("checkpoint", notice_s=5.0)
+        assert len(seen["warn"]) == 1 and seen["ckpt"] == []
+        assert res.lost_work_s == pytest.approx(550.0)
+        assert res.rounds_completed == 2
+
+    def test_async_engine_checkpoint_path(self):
+        res, seen, _ = run_notice("checkpoint",
+                                  policy="fedcostaware_async")
+        assert len(seen["ckpt"]) == 1 and len(seen["resume"]) == 1
+        assert res.lost_work_s == pytest.approx(120.0)
+
+    def test_snapshot_lands_in_store(self):
+        _, seen, runner = run_notice("checkpoint")
+        data = snapshots.load_snapshot(runner.ckpt_store, "a")
+        assert data is not None
+        assert data["remaining"] == pytest.approx(470.0)
+
+    def test_unknown_on_warning_mode_rejected(self):
+        cfg = FLRunConfig(dataset="t", clients=CLIENTS, n_epochs=1,
+                          policy="spot", on_warning="checkpointing")
+        with pytest.raises(ValueError, match="unknown on_warning"):
+            FLCloudRunner(cfg, cloud_cfg=replay_cloud(120.0))
+
+    def test_epoch_rollover_during_write_discards_snapshot(self):
+        """The snapshot completion must not pair the old epoch's
+        progress with a new epoch that started on the same warm
+        instance during the write window: the stale snapshot would let
+        the resume skip work that was never performed."""
+        # short epoch ending inside the write window: warning at 580,
+        # epoch 0 (150 -> 585) ends mid-write, epoch 1 starts at 585
+        # on the same instance (fedcostaware_async re-dispatches
+        # synchronously), completion fires at 590
+        clients = (ClientProfile("a", mean_epoch_s=435.0, jitter=0.0,
+                                 cold_multiplier=1.0, zone="us-east-1a"),)
+        cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=4,
+                          policy="fedcostaware_async", seed=0,
+                          on_warning="checkpoint", buffer_k=1)
+        runner = FLCloudRunner(cfg, cloud_cfg=replay_cloud(120.0),
+                               sched_cfg=SCHED)
+        ckpts = []
+        runner.bus.subscribe(ClientCheckpointed, ckpts.append)
+        res = runner.run()
+        # the run's only warning (t=580) straddles the epoch rollover
+        # at 585, so its snapshot must be discarded — pairing epoch 0's
+        # 430 s progress with epoch 1's duration would produce a
+        # remaining of ~5 s and skip ~320 s of never-performed work
+        assert ckpts == []
+        # the reclaim at 700 recovers via the periodic checkpoint of
+        # the *new* epoch: 115 s elapsed, none preserved (600 s cadence)
+        assert res.lost_work_s == pytest.approx(115.0)
+        assert res.rounds_completed == 4
+
+    def test_drain_moves_peer_prewarm_targets(self):
+        """Under the lifecycle-managed policy, drain's recovery must
+        push back already-terminated peers' pre-warm targets exactly
+        like a reclaim recovery does (§III-D), instead of letting them
+        idle at the barrier while the drained client redoes work."""
+        clients = (ClientProfile("a", mean_epoch_s=900.0, jitter=0.0,
+                                 cold_multiplier=1.0, zone="us-east-1a"),
+                   ClientProfile("b", mean_epoch_s=150.0, jitter=0.0,
+                                 cold_multiplier=1.0, zone="us-east-1b"))
+        def run(mode):
+            cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=3,
+                              policy="fedcostaware", seed=0,
+                              on_warning=mode)
+            return FLCloudRunner(cfg, cloud_cfg=replay_cloud(120.0),
+                                 sched_cfg=SCHED).run()
+        drain, ignore = run("drain"), run("ignore")
+        assert drain.rounds_completed == 3
+        assert drain.lost_work_s < ignore.lost_work_s
+        assert drain.total_cost < ignore.total_cost
+        # peer "b" must not sit idle at the barrier while "a" redoes
+        # its epoch: its idle time under drain stays at most ignore's
+        from repro.fl.telemetry import state_totals
+        d_idle = state_totals(drain.timeline).get(("b", "idle"), 0.0)
+        i_idle = state_totals(ignore.timeline).get(("b", "idle"), 0.0)
+        assert d_idle <= i_idle + 1e-6
+
+    def test_terminated_before_reclaim_is_engine_noop(self):
+        """Drain's own terminate races the reclaim: the later
+        InstancePreempted for the drained instance must not reach the
+        engine (no ClientLost, no double recovery)."""
+        res, seen, runner = run_notice("drain")
+        preempts = [e for e in runner.sim.event_log
+                    if e["kind"] == "preempt"]
+        assert preempts == [] and seen["lost"] == []
+
+
+# ---------------------------------------------------------------------------
+# New-event serialization (schema v3 vocabulary).
+# ---------------------------------------------------------------------------
+class TestCheckpointEventCodec:
+    @pytest.mark.parametrize("ev", [
+        ClientCheckpointed(5.0, "c1", 2, 430.0, 470.0, 700.0),
+        ClientResumedFromCheckpoint(9.0, "c1", 2, 470.0),
+    ])
+    def test_round_trip(self, ev):
+        assert decode_event(encode_event(ev)) == ev
+
+
+class TestSnapshotStore:
+    def test_round_trip_and_delete(self):
+        store = MemoryStore()
+        snapshots.save_snapshot(store, "c", {"remaining": 1.5})
+        assert snapshots.load_snapshot(store, "c") == {"remaining": 1.5}
+        snapshots.delete_snapshot(store, "c")
+        assert snapshots.load_snapshot(store, "c") is None

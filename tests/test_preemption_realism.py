@@ -1,0 +1,70 @@
+"""Pinned assertions for benchmarks/preemption_realism.py — the two
+acceptance claims of the preemption-realism subsystem:
+
+  (a) under the price-coupled model, interruption incidence correlates
+      with trace price spikes (the mean price at reclaim instants sits
+      well above the zone's time-averaged price);
+  (b) notice-aware checkpointing strictly reduces lost client-seconds
+      and total cost vs periodic-only checkpointing in the pinned
+      replayed-interruption scenario (and "drain" improves further).
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.preemption_realism import (compare_modes,
+                                           interruption_price_lift,
+                                           run_mode)
+
+
+class TestPriceCoupledCorrelation:
+    def test_interruptions_cluster_in_price_spikes(self):
+        lift = interruption_price_lift()
+        assert lift["n_interruptions"] >= 5
+        # spiky.csv spends 6 of 48 hours at 0.90 vs a ~0.30 base; with
+        # sensitivity 8 essentially every reclaim lands inside a spike
+        assert lift["lift"] > 1.5
+        assert lift["mean_price_at_interrupt"] == pytest.approx(0.90,
+                                                                rel=0.05)
+
+    def test_zero_sensitivity_kills_the_correlation(self):
+        flat = interruption_price_lift(sensitivity=0.0)
+        assert flat["n_interruptions"] > 0
+        # decoupled hazard: reclaims land at ~the time-averaged price
+        assert flat["lift"] < 1.3
+
+
+class TestNoticeAwareCheckpointingWins:
+    @pytest.fixture(scope="class")
+    def modes(self):
+        return compare_modes(model="replay")
+
+    def test_all_modes_complete_every_round(self, modes):
+        assert all(m["rounds_completed"] == 3 for m in modes.values())
+
+    def test_checkpoint_strictly_reduces_lost_work(self, modes):
+        assert modes["checkpoint"]["lost_work_s"] < \
+            modes["ignore"]["lost_work_s"]
+
+    def test_checkpoint_strictly_reduces_cost(self, modes):
+        assert modes["checkpoint"]["total_cost"] < \
+            modes["ignore"]["total_cost"]
+
+    def test_drain_is_at_least_as_good_as_checkpoint(self, modes):
+        assert modes["drain"]["lost_work_s"] <= \
+            modes["checkpoint"]["lost_work_s"]
+        assert modes["drain"]["total_cost"] <= \
+            modes["checkpoint"]["total_cost"]
+
+    def test_drain_avoids_the_reclaim_entirely(self, modes):
+        assert modes["drain"]["n_preemptions"] == 0
+        assert modes["ignore"]["n_preemptions"] >= 1
+
+
+class TestFlatModelStillWorks:
+    def test_constant_model_grid_completes(self):
+        r = run_mode("constant", "checkpoint", n_epochs=2)
+        assert r["rounds_completed"] == 2
