@@ -125,6 +125,11 @@ def run(record_dir: Optional[Union[str, Path]] = None,
                 "rate_per_hr": (row.od_rate if policy == "on_demand"
                                 else row.spot_rate),
                 "total_cost": round(res.total_cost, 4),
+                # storage dollars of warning-window checkpoint writes
+                # (a subset of total_cost; non-zero only when the
+                # market sets StorageRates and a notice window lets
+                # `on_warning=checkpoint|drain` snapshots land)
+                "checkpoint_cost": round(res.checkpoint_cost, 6),
                 "paper_cost": target,
                 "rel_err": (round(abs(res.total_cost - target) / target, 4)
                             if target is not None else None),
@@ -161,8 +166,8 @@ def main(argv=None):
                     help="comma-separated provider list for "
                          "--price-trace (default: aws)")
     args = ap.parse_args(argv)
-    print("dataset,algorithm,total_cost,paper_cost,rel_err,"
-          "savings_vs_od_pct,paper_savings_pct")
+    print("dataset,algorithm,total_cost,checkpoint_cost,paper_cost,"
+          "rel_err,savings_vs_od_pct,paper_savings_pct")
     def fmt(v):
         return "" if v is None else v
 
@@ -171,6 +176,7 @@ def main(argv=None):
     for r in run(record_dir=args.record_dir, only_dataset=args.row,
                  price_trace=args.price_trace, providers=providers):
         print(f"{r['dataset']},{r['algorithm']},{r['total_cost']},"
+              f"{r['checkpoint_cost']},"
               f"{fmt(r['paper_cost'])},{fmt(r['rel_err'])},"
               f"{fmt(r.get('savings_vs_od_pct'))},"
               f"{fmt(r.get('paper_savings_pct'))}")

@@ -26,28 +26,45 @@ from __future__ import annotations
 from collections import defaultdict
 from typing import Callable, Dict, Optional, Set
 
-from repro.core.events import (BillingTick, EventBus, InstancePreempted,
-                               InstanceReady, InstanceTerminated)
+from repro.core.events import (BillingTick, CheckpointBilled,
+                               ClientCheckpointed, EventBus,
+                               InstancePreempted, InstanceReady,
+                               InstanceTerminated)
 from repro.cloud.pricing import SpotMarket
 
 
 class CostAccountant:
     """Per-client dollar totals as a bus consumer: O(1) amortized
     folding of closed `BillingTick` segments plus on-demand pricing of
-    the open ones. Pass `prices=None` (no clock) for replay mode."""
+    the open ones. Pass `prices=None` (no clock) for replay mode.
+
+    Warning-window checkpoint writes are billed too (ROADMAP
+    "checkpoint-aware cost model"): on `ClientCheckpointed` the live
+    accountant prices the write against the client's provider's
+    `StorageRates` (S3 PUT + per-MB egress of the snapshot's
+    `size_mb`) and publishes the charge as `CheckpointBilled`, whose
+    handler folds it into the totals — so a replayed stream rebuilds
+    the exact same checkpoint spend without a price book. Default
+    rates are zero: checkpoint dollars only appear when a market opts
+    in, keeping every pre-redesign total unchanged."""
 
     def __init__(self, bus: EventBus, prices: Optional[SpotMarket] = None,
                  clock: Optional[Callable[[], float]] = None):
+        self._bus = bus
         self._prices = prices
         self._clock = clock
         self._closed: Dict[str, float] = defaultdict(float)
         self._closed_total = 0.0
+        self._ckpt: Dict[str, float] = defaultdict(float)
+        self._ckpt_total = 0.0
         self._open: Dict[int, object] = {}          # iid -> Instance
         self._open_by_client: Dict[str, Set[int]] = defaultdict(set)
         bus.subscribe(InstanceReady, self._on_ready)
         bus.subscribe(BillingTick, self._on_billing)
         bus.subscribe(InstanceTerminated, self._on_closed)
         bus.subscribe(InstancePreempted, self._on_closed)
+        bus.subscribe(ClientCheckpointed, self._on_checkpointed)
+        bus.subscribe(CheckpointBilled, self._on_checkpoint_billed)
 
     # ------------------------------------------------------------------
     # Event handlers.
@@ -71,6 +88,25 @@ class CostAccountant:
         if self._open.pop(inst.iid, None) is not None:
             self._open_by_client[inst.client].discard(inst.iid)
 
+    def _on_checkpointed(self, ev: ClientCheckpointed):
+        """Live mode: price the checkpoint write against the storage
+        rates of the provider that wrote it (stamped on the event by
+        the executor), and publish the (non-zero) charge as
+        `CheckpointBilled`. Replay mode skips this — the recorded
+        `CheckpointBilled` carries the charge."""
+        if self._prices is None:
+            return
+        rates = self._prices.provider_of(ev.provider or None).storage
+        amount = rates.checkpoint_cost(ev.size_mb)
+        if amount > 0.0:
+            self._bus.publish(CheckpointBilled(ev.t, ev.client, amount))
+
+    def _on_checkpoint_billed(self, ev: CheckpointBilled):
+        """Fold one checkpoint's storage dollars into the totals (live
+        and replay alike)."""
+        self._ckpt[ev.client] += ev.amount
+        self._ckpt_total += ev.amount
+
     # ------------------------------------------------------------------
     # Queries.
     # ------------------------------------------------------------------
@@ -83,15 +119,26 @@ class CostAccountant:
                                  provider=getattr(inst, "provider", None))
 
     def client_cost(self, client: str) -> float:
-        """Dollars accrued by `client` so far, open segments included."""
-        return (self._closed[client]
+        """Dollars accrued by `client` so far: open segments and
+        checkpoint storage included."""
+        return (self._closed[client] + self._ckpt[client]
                 + sum(self._open_cost(self._open[i])
                       for i in self._open_by_client[client]))
 
     def total_cost(self) -> float:
         """Dollars accrued by the whole run so far."""
-        return (self._closed_total
+        return (self._closed_total + self._ckpt_total
                 + sum(self._open_cost(i) for i in self._open.values()))
+
+    def checkpoint_cost(self, client: str) -> float:
+        """Storage dollars `client`'s warning-window checkpoint writes
+        have accrued (a subset of `client_cost`)."""
+        return self._ckpt[client]
+
+    def checkpoint_cost_total(self) -> float:
+        """Storage dollars all checkpoint writes have accrued (a
+        subset of `total_cost`)."""
+        return self._ckpt_total
 
     def per_client(self) -> Dict[str, float]:
         """`client_cost` for every client ever billed or running."""

@@ -42,6 +42,21 @@ DEFAULT_PROVIDER = "aws"
 
 
 @dataclasses.dataclass(frozen=True)
+class StorageRates:
+    """Object-storage pricing of one provider: what a warning-window
+    checkpoint write costs (S3-style flat PUT request + per-MB egress
+    of the model state). Zero by default, so checkpoint writes stay
+    free — and every pre-redesign total unchanged — until a market
+    opts in."""
+    put_usd: float = 0.0               # $ per PUT request
+    egress_usd_per_mb: float = 0.0     # $ per MB written out
+
+    def checkpoint_cost(self, size_mb: float) -> float:
+        """Dollars one checkpoint write of `size_mb` MB costs."""
+        return self.put_usd + self.egress_usd_per_mb * max(size_mb, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
 class Provider:
     """Billing semantics of one cloud provider (formerly CloudConfig
     globals, now carried per provider so markets can mix them)."""
@@ -54,6 +69,8 @@ class Provider:
     # (repro.cloud.preemption.PriceCoupledModel); 0 keeps this
     # provider's reclaim rate flat even when the market spikes
     preemption_price_sensitivity: float = 1.0
+    # object-storage rates billed per warning-window checkpoint write
+    storage: StorageRates = StorageRates()
 
     @classmethod
     def from_cloud_config(cls, cfg: CloudConfig,
@@ -75,7 +92,10 @@ class Provider:
                    min_billing_s=pc.min_billing_s,
                    preemption_notice_s=pc.preemption_notice_s,
                    preemption_price_sensitivity=(
-                       pc.preemption_price_sensitivity))
+                       pc.preemption_price_sensitivity),
+                   storage=StorageRates(
+                       pc.storage_put_usd,
+                       pc.storage_egress_usd_per_mb))
 
 
 @dataclasses.dataclass(frozen=True)

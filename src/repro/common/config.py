@@ -246,6 +246,13 @@ class ProviderConfig:
     # the spot-history format minus the price column, sharing the
     # market epoch with `price_trace` (see `repro.cloud.traces`)
     interruption_trace: Optional[str] = None
+    # object-storage rates (`repro.cloud.pricing.StorageRates`) billed
+    # per warning-window checkpoint write: a flat PUT-request charge
+    # plus per-MB egress of the model state
+    # (`SchedulerConfig.warning_ckpt_size_mb`). Zero by default, so
+    # checkpoint writes stay free unless a market opts in.
+    storage_put_usd: float = 0.0
+    storage_egress_usd_per_mb: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,6 +305,11 @@ class SchedulerConfig:
     # long, else the engine falls back to periodic-checkpoint (lost
     # work) semantics
     warning_ckpt_write_s: float = 10.0
+    # model-state megabytes one warning-window checkpoint writes — what
+    # the provider's `StorageRates` (S3 PUT + per-MB egress) bill; the
+    # default rates are zero, so this only costs dollars once a
+    # provider sets non-zero storage rates
+    warning_ckpt_size_mb: float = 64.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -320,7 +332,13 @@ class FLRunConfig:
     # every provider in the market or stays on the default provider
     cross_provider: Optional[bool] = None
     # None -> the policy's own on_warning default; "ignore" | "drain" |
-    # "checkpoint" overrides how engines react to a provider's
-    # preemption-notice warning (see `repro.fl.engines.base`)
+    # "checkpoint" overrides how the run reacts to a provider's
+    # preemption-notice warning (see `repro.core.strategy`). The
+    # override flows through the policy knob, so a composition whose
+    # `WarningReactionSpec` pins an explicit mode keeps that mode.
     on_warning: Optional[str] = None
+    # publish a `DirectiveIssued` event for every strategy directive
+    # the DirectiveExecutor applies (observability; off by default so
+    # recorded streams and golden traces stay unchanged)
+    trace_directives: bool = False
     seed: int = 0

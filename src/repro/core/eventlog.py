@@ -41,8 +41,15 @@ from repro.core.events import EVENT_TYPES, Event, EventBus
 #        ClientResumedFromCheckpoint. Purely additive — v1/v2 logs
 #        (golden copies under tests/golden/v1, tests/golden/v2) replay
 #        unchanged.
-SCHEMA_VERSION = 3
-SUPPORTED_SCHEMAS = (1, 2, 3)
+#   v4 — strategy-API vocabulary: DirectiveIssued (opt-in directive
+#        tracing), ClientScreenedOut (§III-E exclusions),
+#        CheckpointBilled (storage dollars per warning checkpoint);
+#        ClientCheckpointed gains `size_mb`. Purely additive — v1–v3
+#        logs (golden copies under tests/golden/v1..v3) replay
+#        unchanged; fields absent from older logs take their
+#        dataclass defaults on decode.
+SCHEMA_VERSION = 4
+SUPPORTED_SCHEMAS = (1, 2, 3, 4)
 
 _SCALARS = (bool, int, float, str)
 
@@ -111,13 +118,16 @@ def _decode_value(v: Any) -> Any:
 
 def decode_event(rec: Dict[str, Any]) -> Event:
     """Inverse of `encode_event`; instance snapshots decode to
-    `InstanceRef`. Raises on event types absent from `EVENT_TYPES`."""
+    `InstanceRef`. Raises on event types absent from `EVENT_TYPES`.
+    Fields an older-schema log does not carry (e.g. v3's
+    `ClientCheckpointed` without `size_mb`) take their dataclass
+    defaults, so additive field growth never breaks replay."""
     name = rec["type"]
     if name not in EVENT_TYPES:
         raise ValueError(f"unknown event type in log: {name!r}")
     cls = EVENT_TYPES[name]
     kwargs = {f.name: _decode_value(rec[f.name])
-              for f in dataclasses.fields(cls)}
+              for f in dataclasses.fields(cls) if f.name in rec}
     return cls(**kwargs)
 
 

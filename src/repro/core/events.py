@@ -138,12 +138,17 @@ class ClientCheckpointed(Event):
     or "drain"): the client's training state through `progress_s`
     seconds of the epoch is durable, so a reclaim now only loses work
     done after the snapshot. `remaining_s` is the epoch time still owed
-    if the client resumes from this snapshot."""
+    if the client resumes from this snapshot. `size_mb` is the model
+    state written and `provider` the cloud the writing instance runs
+    on — what the provider's `StorageRates` bill (schema v4; absent
+    in older logs and defaulted on decode)."""
     client: str
     round_idx: int
     progress_s: float
     remaining_s: float
     reclaim_at: float
+    size_mb: float = 0.0
+    provider: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,6 +206,38 @@ class BudgetExhausted(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class ClientScreenedOut(Event):
+    """A `ScreenOut` directive was executed: budget screening excluded
+    `client` from `round_idx` on (schema v4). Follows the
+    `BudgetExhausted` event and precedes the instance teardown."""
+    client: str
+    round_idx: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectiveIssued(Event):
+    """Observability trace of one executed strategy directive (schema
+    v4). Only published when directive tracing is enabled
+    (`FLRunConfig.trace_directives`) — default event streams carry
+    none, keeping golden traces unmoved. `kind` is the directive class
+    name; `detail` a short human-readable argument summary."""
+    kind: str
+    client: str
+    detail: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointBilled(Event):
+    """Storage dollars charged for one warning-window checkpoint write
+    (S3 PUT + per-MB egress, the provider's `StorageRates`; schema v4).
+    Published by the live `CostAccountant` so replay consumers rebuild
+    the same checkpoint spend without a price book. Only published when
+    the charge is non-zero."""
+    client: str
+    amount: float
+
+
+@dataclasses.dataclass(frozen=True)
 class RunCompleted(Event):
     """Terminal event carrying the run summary.
 
@@ -226,7 +263,8 @@ EVENT_TYPES: Dict[str, Type[Event]] = {
         InstancePreempted, InstanceTerminated, BillingTick, ClientReady,
         ClientPreemptionWarning, ClientLost, ClientCheckpointed,
         ClientResumedFromCheckpoint, RoundStarted, RoundCompleted,
-        ClientStateChanged, BudgetExhausted, RunCompleted,
+        ClientStateChanged, BudgetExhausted, ClientScreenedOut,
+        DirectiveIssued, CheckpointBilled, RunCompleted,
     )
 }
 

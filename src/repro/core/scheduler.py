@@ -10,9 +10,13 @@ Implements, against the simulated cloud:
     critical path out (§III-D),
   * budget screening before each round (§III-E).
 
-The scheduler is policy-pluggable: the OnDemand / PlainSpot baselines in
-`repro.core.policies` share this interface but disable lifecycle
-management, which is exactly the paper's Table I comparison.
+Since the composable-strategy redesign this class is the pure
+*decision core*: round engines never call it directly. The strategy
+components in `repro.core.strategy` (LifecycleStrategy wrapping the
+Listing-1 calls, BudgetScreen wrapping §III-E) read and update it
+through the `StrategyStack`, and the OnDemand / PlainSpot baselines
+simply compose no strategies — which is exactly the paper's Table I
+comparison.
 
 """
 from __future__ import annotations
@@ -39,13 +43,13 @@ class RoundClientState:
 
 
 class FedCostAwareScheduler:
-    """Pure decision logic with no side effects: round engines
-    (`repro.fl.engines`) consume the decisions and the cluster manager
-    (`repro.fl.cluster`) executes them (terminate / pre-warm spin-ups),
-    so the scheduler stays independently testable and engine-agnostic —
-    the async buffered engine reuses the estimator EMAs and §III-E
-    budget screening while skipping the barrier-specific Listing-1
-    calls.
+    """Pure decision logic with no side effects: the strategy
+    components (`repro.core.strategy`) consume the decisions and the
+    `DirectiveExecutor` (`repro.fl.cluster`) executes them (terminate /
+    pre-warm spin-ups), so the scheduler stays independently testable
+    and engine-agnostic — the async buffered engine's stack reuses the
+    estimator EMAs and §III-E budget screening while skipping the
+    barrier-specific Listing-1 calls.
     """
 
     def __init__(self, cfg: SchedulerConfig, estimator: TimeEstimator,

@@ -42,8 +42,6 @@ class AsyncBufferedEngine(BaseEngine):
         self._dispatch_round: Dict[str, int] = {}
         self._active: List[str] = []       # participating clients, ordered
         self._task: Dict[str, int] = {}    # client -> in-flight task iid
-        self._train_start: Dict[str, float] = {}
-        self._train_duration: Dict[str, float] = {}
         self._resumed: set = set()            # partial epochs: skip EMAs
         self._pending_dispatch: set = set()   # waiting for instance ready
 
@@ -109,7 +107,7 @@ class AsyncBufferedEngine(BaseEngine):
             return                                  # stale (preempted)
         if c not in self._active:
             return                                  # excluded mid-flight
-        self._warning_ckpt.pop(c, None)     # epoch done: snapshot stale
+        self.strategies.invalidate_ckpt(c)  # epoch done: snapshot stale
         t = self.sim.now
         dur = t - self._train_start[c]
         cold = self.cluster.is_fresh(inst.iid)
@@ -125,9 +123,9 @@ class AsyncBufferedEngine(BaseEngine):
         if c in self._resumed:
             self._resumed.discard(c)
         else:
-            self.scheduler.est.observe_epoch(c, dur, cold)
+            self.strategies.note_observation(c, epoch_s=dur, cold=cold)
         if spin_obs is not None:
-            self.scheduler.est.observe_spin_up(c, spin_obs)
+            self.strategies.note_observation(c, spin_up_s=spin_obs)
         if self.hooks:
             self.hooks.run_local(c, self._round_idx)
         self._buffer.append(c)
@@ -167,13 +165,12 @@ class AsyncBufferedEngine(BaseEngine):
         if r + 1 >= self.run_cfg.n_epochs:
             self._finish_run()
             return
-        if self.policy.enforce_budgets:
-            self._screen_budgets()
-            if not self._active and not self._buffer:
-                # round r+1 never opens: keep _round_idx at the last
-                # completed round so rounds_completed == #RoundCompleted.
-                self._finish_run()
-                return
+        self._screen_budgets(r + 1)
+        if not self._active and not self._buffer:
+            # round r+1 never opens: keep _round_idx at the last
+            # completed round so rounds_completed == #RoundCompleted.
+            self._finish_run()
+            return
         self._round_idx = r + 1
         joins = [c for c, p in self.profiles.items()
                  if c not in self._active and c not in self.excluded
@@ -183,19 +180,16 @@ class AsyncBufferedEngine(BaseEngine):
         for c in joins:
             self._join(c)
 
-    def _screen_budgets(self):
-        self._sync_budgets()
-        keep = self.scheduler.screen_participants(
-            list(self._active), self._spot_price_of)
+    def _screen_budgets(self, round_idx: int):
+        """§III-E screening at the round boundary: the strategy stack
+        excludes the unaffordable clients (publishing and tearing
+        down through `ScreenOut` directives); the engine only drops
+        them from its own dispatch bookkeeping."""
+        keep = self._screen_round(round_idx, list(self._active))
         for c in [c for c in self._active if c not in keep]:
-            self.excluded.append(c)
-            self._publish_budget_exhausted(c)
             self._active.remove(c)
             self._task.pop(c, None)
             self._pending_dispatch.discard(c)
-            if self.cluster.instance_of(c) is not None:
-                self._mark(c, "idle")
-                self.cluster.terminate(c)
 
     # ------------------------------------------------------------------
     # Bus events.
@@ -227,7 +221,7 @@ class AsyncBufferedEngine(BaseEngine):
         # snapshot when the provider's notice let us write one, else
         # the last periodic checkpoint (§III-D)
         remaining, source = self._preemption_remaining(c)
-        self._note_lost_work(c, remaining)
+        self.note_lost_work(c, remaining)
         self.cluster.request(c, resume_token={"remaining": remaining,
                                               "source": source})
 

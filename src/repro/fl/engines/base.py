@@ -3,11 +3,18 @@
 A `RoundEngine` owns the FL-round semantics of a run: when clients are
 dispatched, what constitutes a completed round, and when aggregation
 fires. Engines are driven entirely by client-level bus events
-(`ClientReady`, `ClientLost`, `ClientPreemptionWarning`) plus the
-simulator clock — they never talk to raw instance callbacks, which is
-what makes new round disciplines (async buffering, straggler cut-offs,
-hierarchical rounds) addable without touching the cloud or cluster
-layers.
+(`ClientReady`, `ClientLost`) plus the simulator clock — they never
+talk to raw instance callbacks, which is what makes new round
+disciplines (async buffering, straggler cut-offs, hierarchical rounds)
+addable without touching the cloud or cluster layers.
+
+Scheduling decisions are not made here either: engines report
+observations to the run's `StrategyStack` (`repro.core.strategy`) and
+invoke its decision points; the strategy components answer with typed
+directives that the `DirectiveExecutor` (`repro.fl.cluster`) applies.
+The engine's remaining job is purely the round discipline — which is
+why a policy can swap lifecycle/budget/warning behavior without any
+engine edit.
 
 Contract:
   * `start()` schedules the initial work at t=0; the composition root
@@ -15,14 +22,11 @@ Contract:
   * `result()` is called after the event heap drains and returns the
     engine's `RunResult`.
 
-Preemption-notice handling (`Policy.on_warning`, docs/events.md) is
-shared here: when a provider's reclaim warning reaches a client that is
-mid-epoch, the engine can snapshot its training state to the checkpoint
-store inside the notice window ("checkpoint"), additionally terminate
-and re-request before the reclaim lands ("drain"), or do nothing
-("ignore", the historical lost-work behavior). Subclasses opt in by
-implementing `_is_training` and maintaining the `_train_start` /
-`_train_duration` bookkeeping both built-in engines already keep.
+Engines also serve as the *view* the `WarningReaction` strategy reads
+per-epoch facts from (`is_training` / `train_start` / …): subclasses
+opt in to notice-aware checkpointing by implementing `_is_training`
+and keeping the `_train_start` / `_train_duration` bookkeeping both
+built-in engines already keep.
 """
 from __future__ import annotations
 
@@ -33,19 +37,17 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.checkpoint import snapshots
 from repro.checkpoint.store import MemoryStore, ObjectStore
 from repro.cloud.accounting import CostAccountant
-from repro.cloud.simulator import RUNNING, CloudSimulator
+from repro.cloud.simulator import CloudSimulator
 from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
                                  SchedulerConfig)
-from repro.core.events import (BudgetExhausted, ClientCheckpointed,
-                               ClientLost, ClientPreemptionWarning,
-                               ClientReady, ClientResumedFromCheckpoint,
+from repro.core.events import (ClientLost, ClientReady,
+                               ClientResumedFromCheckpoint,
                                ClientStateChanged, RoundCompleted,
                                RoundStarted)
 from repro.core.policies import Policy
-from repro.core.scheduler import FedCostAwareScheduler
+from repro.core.strategy import StrategyStack
 from repro.fl.cluster import ClusterManager
 from repro.fl.telemetry import TimelineRecorder
 from repro.fl.types import RunResult, TrainerHooks
@@ -60,7 +62,7 @@ class EngineContext:
     policy: Policy
     sim: CloudSimulator
     cluster: ClusterManager
-    scheduler: FedCostAwareScheduler
+    strategies: StrategyStack
     accountant: CostAccountant
     timeline: TimelineRecorder
     rng: np.random.RandomState
@@ -81,7 +83,7 @@ class BaseEngine:
         self.policy = ctx.policy
         self.sim = ctx.sim
         self.cluster = ctx.cluster
-        self.scheduler = ctx.scheduler
+        self.strategies = ctx.strategies
         self.accountant = ctx.accountant
         self.timeline = ctx.timeline
         self.hooks = ctx.hooks
@@ -95,15 +97,16 @@ class BaseEngine:
         self._round_idx = -1
         self._done = False
         self._makespan: Optional[float] = None
-        # notice-aware checkpointing state + resilience metrics
-        self._warning_ckpt: Dict[str, dict] = {}   # client -> snapshot
+        # per-epoch bookkeeping (also read by the WarningReaction
+        # strategy through the view methods below)
+        self._train_start: Dict[str, float] = {}
+        self._train_duration: Dict[str, float] = {}
         self.lost_work_s = 0.0
         self.n_preemptions = 0
+        self.strategies.attach_engine(self)
         self.sim.bus.subscribe(ClientLost, self._count_client_lost)
         self.sim.bus.subscribe(ClientReady, self._on_client_ready)
         self.sim.bus.subscribe(ClientLost, self._on_client_lost)
-        self.sim.bus.subscribe(ClientPreemptionWarning,
-                               self._on_client_warning)
 
     # ------------------------------------------------------------------
     # Round discipline (subclass responsibility).
@@ -128,6 +131,43 @@ class BaseEngine:
         return False
 
     # ------------------------------------------------------------------
+    # Strategy view: the per-epoch facts the WarningReaction strategy
+    # reads (and the two engine-side reactions it triggers).
+    # ------------------------------------------------------------------
+    def is_done(self) -> bool:
+        """Has the run finished (strategies stop reacting)?"""
+        return self._done
+
+    def is_training(self, c: str) -> bool:
+        """Public view of `_is_training` for the strategy layer."""
+        return self._is_training(c)
+
+    def train_start(self, c: str) -> float:
+        """When the client's current epoch started (simulated s)."""
+        return self._train_start[c]
+
+    def train_duration(self, c: str) -> float:
+        """The client's current epoch's total duration (simulated s)."""
+        return self._train_duration[c]
+
+    def current_round(self) -> int:
+        """The engine's current round index."""
+        return self._round_idx
+
+    def note_lost_work(self, c: str, remaining: float):
+        """Account the client-seconds of training that must be redone:
+        time spent this epoch minus what the surviving checkpoint
+        preserves."""
+        elapsed = max(self.sim.now - self._train_start[c], 0.0)
+        preserved = max(self._train_duration[c] - remaining, 0.0)
+        self.lost_work_s += max(elapsed - preserved, 0.0)
+
+    def after_drain(self, c: str, remaining: float):
+        """Engine reaction after a `Drain` directive re-requested the
+        client's replacement. Default: nothing; the sync barrier
+        additionally runs the §III-D schedule adjustment."""
+
+    # ------------------------------------------------------------------
     # Shared helpers.
     # ------------------------------------------------------------------
     def _sample_duration(self, c: str, cold: bool) -> float:
@@ -145,105 +185,15 @@ class BaseEngine:
         preserved = math.floor(elapsed / ck) * ck
         return max(train_duration - preserved, 1.0)
 
-    # ------------------------------------------------------------------
-    # Preemption-notice handling (shared across engines).
-    # ------------------------------------------------------------------
-    def _on_client_warning(self, ev: ClientPreemptionWarning):
-        """Provider reclaim notice for a tracked client. Under the
-        "checkpoint"/"drain" policies, start writing a training-state
-        snapshot if (a) the client is actually mid-epoch and (b) the
-        write can finish inside the notice window; otherwise the
-        warning is informational and the reclaim falls back to
-        periodic-checkpoint (lost-work) semantics."""
-        mode = self.policy.on_warning
-        if mode == "ignore" or self._done:
-            return
-        c = ev.client
-        inst = self.cluster.instance_of(c)
-        if inst is None or inst.iid != ev.instance.iid:
-            return                              # stale: already replaced
-        if not self._is_training(c):
-            return                              # idle/pre-warmed: no state
-        write_s = self.sched_cfg.warning_ckpt_write_s
-        if ev.reclaim_at - self.sim.now + 1e-9 < write_s:
-            return      # window too short: checkpoint cannot land
-        # the snapshot captures progress at write *start*; work done
-        # during the write itself is not in it (and is lost on reclaim)
-        epoch_started = self._train_start[c]
-        progress_s = self.sim.now - epoch_started
-        self.sim.schedule_in(write_s, lambda: (
-            self._complete_warning_checkpoint(c, ev.instance, mode,
-                                              ev.reclaim_at, progress_s,
-                                              epoch_started)))
-
-    def _complete_warning_checkpoint(self, c: str, inst, mode: str,
-                                     reclaim_at: float, progress_s: float,
-                                     epoch_started: float):
-        """The notice-triggered snapshot finished writing: persist it,
-        publish `ClientCheckpointed`, and under "drain" proactively
-        vacate the instance. A no-op when the world moved on during the
-        write (instance terminated/preempted, epoch finished — or a new
-        epoch began on the same warm instance, which `epoch_started`
-        detects: pairing the old epoch's progress with the new epoch's
-        duration would make the resume skip unperformed work)."""
-        if self._done:
-            return
-        cur = self.cluster.instance_of(c)
-        if cur is None or cur.iid != inst.iid or cur.state != RUNNING:
-            return          # terminated or reclaimed during the write
-        if not self._is_training(c):
-            return          # epoch finished inside the write window
-        if self._train_start[c] != epoch_started:
-            return          # a different epoch is running now
-        r = self._round_idx
-        remaining = max(self._train_duration[c] - progress_s, 1.0)
-        payload = {"client": c, "round": r, "remaining": remaining,
-                   "progress": progress_s, "t": self.sim.now}
-        snapshots.save_snapshot(self.ckpt_store, c, payload)
-        self._warning_ckpt[c] = payload
-        self.sim.bus.publish(ClientCheckpointed(
-            self.sim.now, c, r, progress_s, remaining, reclaim_at))
-        if mode == "drain":
-            self._drain_after_checkpoint(c, remaining)
-
-    def _drain_after_checkpoint(self, c: str, remaining: float):
-        """"drain": the snapshot is durable, so stop paying for a
-        doomed instance — terminate it now (billing closes at the
-        warning, not the reclaim) and immediately request the
-        replacement with a resume token, giving its spin-up a head
-        start on the reclaim."""
-        # work done during the snapshot write is redone after resume
-        self._note_lost_work(c, remaining)
-        self._warning_ckpt.pop(c, None)     # consumed by this resume
-        self.cluster.terminate(c)
-        self.cluster.request(c, resume_token={
-            "round": self._round_idx, "remaining": remaining,
-            "source": "warning"})
-
     def _preemption_remaining(self, c: str) -> Tuple[float, str]:
         """Epoch time still owed after a reclaim, from the best
-        surviving checkpoint: the warning-window snapshot when it
-        preserves more than the last periodic checkpoint (coarse
-        `checkpoint_every_s` cadences are where the notice pays off),
-        else the periodic one. Returns `(remaining_s, source)` with
-        source "warning" | "periodic"."""
+        surviving checkpoint: the warning-window snapshot when a
+        strategy holds one that preserves more than the last periodic
+        checkpoint, else the periodic one. Returns `(remaining_s,
+        source)` with source "warning" | "periodic"."""
         periodic = self._checkpoint_remaining(
             c, self._train_start[c], self._train_duration[c])
-        snap = self._warning_ckpt.pop(c, None)
-        if snap is not None:
-            stored = snapshots.load_snapshot(self.ckpt_store, c) or snap
-            warn_remaining = float(stored["remaining"])
-            if warn_remaining < periodic:
-                return warn_remaining, "warning"
-        return periodic, "periodic"
-
-    def _note_lost_work(self, c: str, remaining: float):
-        """Account the client-seconds of training that must be redone:
-        time spent this epoch minus what the surviving checkpoint
-        preserves."""
-        elapsed = max(self.sim.now - self._train_start[c], 0.0)
-        preserved = max(self._train_duration[c] - remaining, 0.0)
-        self.lost_work_s += max(elapsed - preserved, 0.0)
+        return self.strategies.preemption_remaining(c, periodic)
 
     def _count_client_lost(self, ev: ClientLost):
         """Every cluster-filtered `ClientLost` is a real spot reclaim
@@ -277,21 +227,15 @@ class BaseEngine:
         else:
             self.hooks.aggregate(participants, round_idx)
 
-    def _sync_budgets(self):
-        for c in self.profiles:
-            self.scheduler.ledger.sync_spend(
-                c, self.accountant.client_cost(c))
-
-    def _spot_price_of(self, c: str) -> float:
-        prof = self.profiles[c]
-        if prof.zone is None:
-            _, p = self.sim.market.cheapest_zone(
-                self.sim.now,
-                providers=self.cluster._placement_providers())
-            return p
-        return self.sim.market.price(prof.zone, self.sim.now,
-                                     self.policy.on_demand,
-                                     provider=prof.provider)
+    def _screen_round(self, round_idx: int,
+                      candidates: List[str]) -> List[str]:
+        """Run the strategy stack's §III-E screening pass; records the
+        newly screened-out clients in `excluded` (their `ScreenOut`
+        directives — `BudgetExhausted`, teardown — were already
+        applied) and returns the surviving participants."""
+        keep, screened = self.strategies.screen(round_idx, candidates)
+        self.excluded.extend(screened)
+        return keep
 
     # ------------------------------------------------------------------
     # Telemetry publication. Engines never write to the timeline or the
@@ -309,9 +253,6 @@ class BaseEngine:
     def _publish_round_completed(self, r: int, participants, snapshot):
         self.sim.bus.publish(RoundCompleted(
             self.sim.now, r, tuple(participants), snapshot))
-
-    def _publish_budget_exhausted(self, c: str):
-        self.sim.bus.publish(BudgetExhausted(self.sim.now, c))
 
     def _cost_snapshot(self) -> Dict[str, float]:
         return {c: self.accountant.client_cost(c) for c in self.profiles}
@@ -340,4 +281,5 @@ class BaseEngine:
             excluded_clients=list(self.excluded),
             per_round_participants=self.per_round_participants,
             lost_work_s=self.lost_work_s,
-            n_preemptions=self.n_preemptions)
+            n_preemptions=self.n_preemptions,
+            checkpoint_cost=self.accountant.checkpoint_cost_total())

@@ -11,14 +11,13 @@ or recovery.
 
 One FL round dispatches every participant, waits for all results (the
 synchronous barrier), aggregates, then starts the next round. The
-FedCostAware scheduler's Listing-1 lifecycle decisions (terminate idle
-instances whose saving beats the respin threshold, pre-warm at
-F_s - T_spin_up - T_buffer) are consumed here and executed by the
-cluster manager.
+engine itself makes no scheduling decisions: results, dispatches and
+recoveries are reported to the `StrategyStack`, whose components
+(Listing-1 lifecycle, §III-E budget screening — `repro.core.strategy`)
+answer with directives the `DirectiveExecutor` applies.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional
 
 from repro.cloud.simulator import RUNNING, SPINNING_UP
@@ -32,8 +31,6 @@ class SyncEngine(BaseEngine):
     def __init__(self, ctx: EngineContext):
         super().__init__(ctx)
         self._pending_task: Dict[str, Optional[int]] = {}  # client->round
-        self._train_start: Dict[str, float] = {}
-        self._train_duration: Dict[str, float] = {}
         self._resumed: set = set()
         self._round_pending: set = set()
         self._participants: List[str] = []
@@ -49,24 +46,13 @@ class SyncEngine(BaseEngine):
         if r >= self.run_cfg.n_epochs:
             self._finish_run()
             return
-        self.scheduler.begin_round(r)
+        self.strategies.begin_round(r)
         # elastic scaling: clients may join at a later round (§V future
         # work); budget exhaustion below is the symmetric leave path.
         clients = [c for c, p in self.profiles.items()
                    if p.join_round <= r]
-        if self.policy.enforce_budgets and r >= 1:
-            before = set(c for c in clients
-                         if not self.scheduler.ledger.is_excluded(c))
-            self._sync_budgets()
-            clients = self.scheduler.screen_participants(
-                [c for c in clients], self._spot_price_of)
-            newly_excluded = before - set(clients)
-            for c in newly_excluded:
-                self.excluded.append(c)
-                self._publish_budget_exhausted(c)
-                if self.cluster.instance_of(c) is not None:
-                    self._mark(c, "idle")
-                    self.cluster.terminate(c)
+        if r >= 1:
+            clients = self._screen_round(r, clients)
         if not clients:
             # nobody makes it into round r: it never ran, so leave
             # _round_idx at the last *completed* round (keeps
@@ -86,15 +72,15 @@ class SyncEngine(BaseEngine):
         t = self.sim.now
         if inst is not None and inst.state == RUNNING:
             cold = self.cluster.is_fresh(inst.iid)
-            self.scheduler.register_dispatch(c, t, cold, False)
+            self.strategies.note_dispatch(c, t, cold, False)
             self._begin_training(c, cold)
         elif inst is not None and inst.state == SPINNING_UP:
             # pre-warmed instance still booting: task queued until ready
             self._pending_task[c] = r
-            self.scheduler.register_dispatch(c, t, True, True)
+            self.strategies.note_dispatch(c, t, True, True)
         else:
             self._pending_task[c] = r
-            self.scheduler.register_dispatch(c, t, True, True)
+            self.strategies.note_dispatch(c, t, True, True)
             self.cluster.request(c)
 
     def _on_client_ready(self, ev: ClientReady):
@@ -133,7 +119,7 @@ class SyncEngine(BaseEngine):
             return                                  # stale (preempted)
         if c not in self._round_pending:
             return
-        self._warning_ckpt.pop(c, None)     # epoch done: snapshot stale
+        self.strategies.invalidate_ckpt(c)  # epoch done: snapshot stale
         t = self.sim.now
         dur = t - self._train_start[c]
         cold = self.cluster.is_fresh(inst.iid)
@@ -145,26 +131,17 @@ class SyncEngine(BaseEngine):
             # Partial (resumed) epochs would corrupt the epoch-time EMAs;
             # only the spin-up observation is still valid.
             self._resumed.discard(c)
-            s = self.scheduler.states[c]
-            s.finished = True
-            s.finish_time = t
-            if spin_obs is not None:
-                self.scheduler.est.observe_spin_up(c, spin_obs)
+            self.strategies.note_resume_result(c, t, spin_obs)
         else:
-            self.scheduler.on_result(c, t, dur, cold, spin_obs)
+            self.strategies.note_result(c, t, dur, cold, spin_obs)
         if self.hooks:
             self.hooks.run_local(c, r)
         self._round_pending.discard(c)
         self._mark(c, "idle")
 
-        if self.policy.manage_lifecycle and self._round_pending:
+        if self._round_pending:
             more = (r + 1) < self.run_cfg.n_epochs
-            prewarm_t = self.scheduler.evaluate_termination(c, t, more)
-            if prewarm_t is not None:
-                self.cluster.terminate(c)
-                self._mark(c, "savings")
-                if math.isfinite(prewarm_t):
-                    self.cluster.schedule_prewarm(c, prewarm_t)
+            self.strategies.client_result(c, t, more)
 
         if not self._round_pending:
             self._end_round(r)
@@ -185,32 +162,20 @@ class SyncEngine(BaseEngine):
         # else the last periodic checkpoint. The client reloads from
         # cloud storage and resumes mid-epoch.
         remaining, source = self._preemption_remaining(c)
-        self._note_lost_work(c, remaining)
+        self.note_lost_work(c, remaining)
         r = self._round_idx
         self.cluster.request(
             c, resume_token={"round": r, "remaining": remaining,
                              "source": source})
-        self._adjust_schedule_for_recovery(c, remaining)
+        self.strategies.recovered(c, remaining)
 
-    def _adjust_schedule_for_recovery(self, c: str, remaining: float):
-        """§III-D dynamic schedule adjustment: push back pre-warm
-        targets of already-terminated clients so they stay off while
-        `c` recovers; each moved spin-up event is rescheduled."""
-        spin_est = self.scheduler.est.model(c).spin_up.get(
-            self.cloud_cfg.spin_up_mean_s)
-        recovery_finish = self.sim.now + spin_est + remaining
-        moved = self.scheduler.on_preemption_recovery(c, recovery_finish)
-        for other, new_t in moved.items():
-            self.cluster.schedule_prewarm(other, new_t)
-
-    def _drain_after_checkpoint(self, c: str, remaining: float):
+    def after_drain(self, c: str, remaining: float):
         """Drain vacates the instance and re-requests immediately —
         the same recovery shape as a reclaim, so the peers' pre-warm
         targets move by the same §III-D adjustment (otherwise they
         would spin up at their original targets and idle at the
         barrier while `c` redoes `remaining` seconds)."""
-        super()._drain_after_checkpoint(c, remaining)
-        self._adjust_schedule_for_recovery(c, remaining)
+        self.strategies.recovered(c, remaining)
 
     def _resume(self, c: str, ev: ClientReady):
         tok = ev.resume_token

@@ -8,18 +8,25 @@ Wires the layered stack together and drains the simulator:
   CostAccountant    incremental per-client dollar accounting off the
                     billing events (cloud.accounting)
   ClusterManager    instance lifecycle: request / terminate / pre-warm /
-                    resume-from-checkpoint (fl.cluster)
+                    standby / resume-from-checkpoint (fl.cluster)
+  DirectiveExecutor applies typed strategy directives against the
+                    cluster (fl.cluster)
+  StrategyStack     the policy's composed scheduling discipline —
+                    Listing-1 lifecycle, §III-E budget screening,
+                    preemption-notice reaction, forecast pre-warming
+                    (core.strategy), sharing one FedCostAware decision
+                    core (core.scheduler)
   RoundEngine       FL-round semantics — SyncEngine reproduces the
                     paper's synchronous barrier (Table I); the
                     AsyncBufferedEngine adds FedBuff-style buffered
                     asynchronous rounds (fl.engines)
-  FedCostAwareScheduler  the paper's Listing-1 decisions (core.scheduler)
 
-The policy (`on_demand` / `spot` / `fedcostaware` / `fedcostaware_async`)
-selects the market, the lifecycle management, and the engine. Optionally
-a `TrainerHooks` object attaches *real JAX training* so the run produces
-an actual global model; simulated time stays decoupled from wall-clock,
-mirroring the paper's scaled-duration simulation setup for MNIST/CIFAR.
+The policy (`on_demand` / `spot` / `fedcostaware` / `fedcostaware_async`
+or any `register_policy`-ed composition) selects the market, the
+strategy composition, and the engine. Optionally a `TrainerHooks`
+object attaches *real JAX training* so the run produces an actual
+global model; simulated time stays decoupled from wall-clock, mirroring
+the paper's scaled-duration simulation setup for MNIST/CIFAR.
 
 Outputs (`RunResult`): per-client costs, a Fig-4 style state timeline, a
 Fig-5 style cumulative cost curve, and the trained model (when hooks
@@ -47,7 +54,8 @@ from repro.common.config import CloudConfig, FLRunConfig, SchedulerConfig
 from repro.core.events import EventBus, RunCompleted
 from repro.core.eventlog import EventRecorder
 from repro.core.policies import Policy, get_policy, make_scheduler
-from repro.fl.cluster import ClusterManager
+from repro.core.strategy import StrategyContext, StrategyStack
+from repro.fl.cluster import ClusterManager, DirectiveExecutor
 from repro.fl.engines import EngineContext, get_engine
 from repro.fl.telemetry import Segment, TimelineRecorder
 from repro.fl.types import RunResult, TrainerHooks
@@ -101,24 +109,76 @@ class FLCloudRunner:
                 "seed": seed, "n_epochs": run_cfg.n_epochs,
                 "clients": [c.name for c in run_cfg.clients]})
         self.sim = CloudSimulator(self.cloud_cfg, seed=seed, bus=self.bus)
+        self._hazard_estimator = None   # lazy price-coupled fallback
         self.accountant = CostAccountant(self.bus, self.sim.market,
                                          clock=lambda: self.sim.now)
+        # the FedCostAware decision core (estimator + ledger): shared
+        # state behind every strategy component; engines never touch it
         self.scheduler = make_scheduler(
             self.policy, self.sched_cfg, self.cloud_cfg.spin_up_mean_s)
         self.profiles = {c.name: c for c in run_cfg.clients}
         for c in run_cfg.clients:
             self.scheduler.ledger.register(c.name, c.budget)
         self.timeline = TimelineRecorder(self.bus)
-        self.cluster = ClusterManager(self.sim, self.policy, self.profiles,
-                                      self.scheduler)
+        # the fire-time staleness check reads pre-warm targets through
+        # the strategy stack (constructed just below; targets are only
+        # consulted at simulated fire time, long after __init__)
+        self.cluster = ClusterManager(
+            self.sim, self.policy, self.profiles, self.scheduler,
+            prewarm_target_of=lambda c: self.strategies.prewarm_target(c))
+        self.executor = DirectiveExecutor(
+            self.cluster, ckpt_store=self.ckpt_store,
+            ckpt_size_mb=self.sched_cfg.warning_ckpt_size_mb,
+            trace=run_cfg.trace_directives)
+        self.strategies = StrategyStack.from_policy(
+            self.policy, StrategyContext(
+                policy=self.policy, sched=self.scheduler,
+                sched_cfg=self.sched_cfg, bus=self.bus,
+                now=lambda: self.sim.now,
+                schedule_in=self.sim.schedule_in,
+                clients=tuple(self.profiles),
+                spin_up_default=self.cloud_cfg.spin_up_mean_s,
+                instance_of=self.cluster.instance_of,
+                standby_of=self.cluster.standby_of,
+                spot_price_of=self.cluster.spot_price_of,
+                spend_of=self.accountant.client_cost,
+                hazard_of=self._hazard_of,
+                is_shutdown=lambda: self.cluster.is_shutdown,
+                ckpt_store=self.ckpt_store,
+                executor=self.executor))
         self.hooks = hooks
         self.engine = get_engine(self.policy.engine)(EngineContext(
             run_cfg=run_cfg, cloud_cfg=self.cloud_cfg,
             sched_cfg=self.sched_cfg, policy=self.policy, sim=self.sim,
-            cluster=self.cluster, scheduler=self.scheduler,
+            cluster=self.cluster, strategies=self.strategies,
             accountant=self.accountant, timeline=self.timeline,
             rng=np.random.RandomState(seed + 101), hooks=hooks,
             ckpt_store=self.ckpt_store))
+
+    # ------------------------------------------------------------------
+    def _hazard_of(self, client: str) -> float:
+        """The reclaim hazard (events/hour) forecast for the client's
+        tracked spot instance right now; 0 when untracked or
+        on-demand. Uses the driving preemption model's own hazard when
+        it exposes one (`PriceCoupledModel`); otherwise — e.g. under
+        recorded-interruption replay, where the true reclaim times are
+        not observable in advance — it *estimates* the hazard from the
+        observable spot price via the same price-coupled formula,
+        which is how a real scheduler would read an interruption
+        forecast off the market. This is the signal
+        `ForecastPrewarmStrategy` pre-warms standbys on."""
+        inst = self.cluster.instance_of(client)
+        if inst is None or inst.on_demand:
+            return 0.0
+        hazard = getattr(self.sim.preemption_model, "hazard", None)
+        if hazard is None:
+            if self._hazard_estimator is None:
+                from repro.cloud.preemption import PriceCoupledModel
+                self._hazard_estimator = PriceCoupledModel(
+                    self.sim.market,
+                    self.cloud_cfg.preemption_rate_per_hr)
+            hazard = self._hazard_estimator.hazard
+        return hazard(inst.provider, inst.zone, self.sim.now) * 3600.0
 
     # ------------------------------------------------------------------
     def run(self) -> RunResult:

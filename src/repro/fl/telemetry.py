@@ -146,4 +146,5 @@ def replay_result(source: Union[str, Path, "EventReplayer"]) -> "RunResult":
         cost_curve=curve.records,
         rounds_completed=done.rounds_completed,
         excluded_clients=list(done.excluded_clients),
-        per_round_participants=per_round)
+        per_round_participants=per_round,
+        checkpoint_cost=accountant.checkpoint_cost_total())

@@ -53,3 +53,7 @@ class RunResult:
     # spot market took (deliberate drain terminations not included)
     lost_work_s: float = 0.0
     n_preemptions: int = 0
+    # storage dollars of warning-window checkpoint writes (S3 PUT +
+    # per-MB egress, the provider's StorageRates) — a subset of
+    # total_cost; rebuilt on replay from CheckpointBilled events
+    checkpoint_cost: float = 0.0

@@ -24,6 +24,7 @@ PUBLIC_MODULES = [
     "src/repro/core/events.py",
     "src/repro/core/eventlog.py",
     "src/repro/core/policies.py",
+    "src/repro/core/strategy.py",
     "src/repro/cloud/pricing.py",
     "src/repro/cloud/simulator.py",
     "src/repro/cloud/preemption.py",

@@ -33,6 +33,7 @@ from repro.fl.telemetry import replay_result, state_totals
 GOLDEN_DIR = Path(__file__).parent / "golden"
 GOLDEN_V1_DIR = GOLDEN_DIR / "v1"
 GOLDEN_V2_DIR = GOLDEN_DIR / "v2"
+GOLDEN_V3_DIR = GOLDEN_DIR / "v3"
 FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
 
 CLOUD = CloudConfig(spot_rate_sigma=0.0)
@@ -332,16 +333,54 @@ class TestSchemaV2Compat:
     @pytest.mark.parametrize("name", V2_TRACES)
     def test_v2_and_v3_streams_are_equivalent(self, name):
         """The default path publishes none of the new v3 events, so the
-        regenerated goldens carry identical event bodies — only the
+        archived v3 goldens carry identical event bodies — only the
         header's schema field moved."""
         h2, recs2 = load_golden(f"v2/{name}")
-        h3, recs3 = load_golden(name)
+        h3, recs3 = load_golden(f"v3/{name}")
         assert h2["schema"] == 2 and h3["schema"] == 3
         assert {k: v for k, v in h2.items() if k != "schema"} == \
             {k: v for k, v in h3.items() if k != "schema"}
         assert len(recs2) == len(recs3)
         for r2, r3 in zip(recs2, recs3):
             assert_json_equal(r3, r2)
+
+
+# ---------------------------------------------------------------------------
+# v3 -> v4 compat: the strategy-API bump is purely additive (new event
+# types + an optional ClientCheckpointed field), so archived schema-3
+# recordings must replay unchanged and differ from the regenerated v4
+# goldens by the header alone — the acceptance proof that the strategy
+# redesign moved zero events.
+# ---------------------------------------------------------------------------
+class TestSchemaV3Compat:
+    V3_TRACES = TRACES + (FED_ISIC_TRACE,)
+
+    @pytest.mark.parametrize("name", V3_TRACES)
+    def test_v3_trace_loads(self, name):
+        rep = EventReplayer.load(GOLDEN_V3_DIR / f"{name}.events.jsonl")
+        assert rep.header["schema"] == 3
+
+    @pytest.mark.parametrize("trace", TRACES)
+    def test_v3_replay_matches_pinned_totals(self, trace):
+        rep = replay_result(GOLDEN_V3_DIR / f"{trace}.events.jsonl")
+        want = GOLDEN_TOTALS[trace]
+        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
+        for c, v in want["per_client"].items():
+            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
+
+    @pytest.mark.parametrize("name", V3_TRACES)
+    def test_v3_and_v4_streams_are_equivalent(self, name):
+        """Under the composable strategy API the four Table-I policies
+        publish the exact pre-redesign event bodies — only the
+        header's schema field moved."""
+        h3, recs3 = load_golden(f"v3/{name}")
+        h4, recs4 = load_golden(name)
+        assert h3["schema"] == 3 and h4["schema"] == 4
+        assert {k: v for k, v in h3.items() if k != "schema"} == \
+            {k: v for k, v in h4.items() if k != "schema"}
+        assert len(recs3) == len(recs4)
+        for r3, r4 in zip(recs3, recs4):
+            assert_json_equal(r4, r3)
 
 
 # ---------------------------------------------------------------------------

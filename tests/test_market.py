@@ -145,11 +145,14 @@ class TestTraceLoader:
 
     def test_validate_dir_reports_all_fixtures(self):
         lines = validate_dir(FIXTURES)
-        # aws.csv + gcp.csv + spiky.csv price histories and the
-        # aws.interruptions.csv reclaim record
-        assert len(lines) == 4
+        # aws.csv + gcp.csv + spiky.csv + spiky_early.csv price
+        # histories and the aws/spiky_early interruption records
+        assert len(lines) == 6
         assert any("aws.csv" in ln for ln in lines)
         assert any("aws.interruptions.csv" in ln for ln in lines)
+        assert any("spiky_early.csv" in ln for ln in lines)
+        assert any("spiky_early.interruptions.csv" in ln
+                   for ln in lines)
 
     def test_malformed_rows_raise(self, tmp_path):
         hdr = ("Timestamp,AvailabilityZone,InstanceType,"

@@ -1,0 +1,433 @@
+"""Tests for the composable SchedulingStrategy API: typed directives,
+the DirectiveExecutor, the declarative Policy composition (+ legacy
+boolean compat shim), engine-registry validation at construction,
+§III-D pre-warm rescheduling edges, and checkpoint-aware cost
+accounting (StorageRates)."""
+import dataclasses
+import warnings
+from pathlib import Path
+
+import pytest
+
+from repro.cloud.pricing import Provider, StorageRates
+from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
+                                 MarketConfig, ProviderConfig,
+                                 SchedulerConfig)
+from repro.core.eventlog import EventReplayer
+from repro.core.policies import (ON_WARNING_MODES, POLICIES, Policy,
+                                 get_policy, make_scheduler,
+                                 register_policy)
+from repro.core.strategy import (BudgetScreen, BudgetScreenSpec,
+                                 Checkpoint, Directive, Drain,
+                                 ForecastPrewarmSpec,
+                                 ForecastPrewarmStrategy,
+                                 LifecycleSpec, LifecycleStrategy,
+                                 PreWarm, ScreenOut,
+                                 SchedulingStrategy, SpinUp,
+                                 StrategySpec, Terminate,
+                                 WarningReaction, WarningReactionSpec)
+from repro.fl.cluster import ClusterManager
+from repro.fl.runner import FLCloudRunner
+from repro.fl.telemetry import replay_result
+
+FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
+CLOUD = CloudConfig(spot_rate_sigma=0.0)
+
+
+def run_recorded(policy="fedcostaware", clients=None, n_epochs=3,
+                 cloud=None, **cfg_kw):
+    clients = clients or (
+        ClientProfile("slow", mean_epoch_s=900, jitter=0.0, n_samples=2),
+        ClientProfile("fast", mean_epoch_s=150, jitter=0.0, n_samples=1),
+    )
+    cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=n_epochs,
+                      policy=policy, seed=0, **cfg_kw)
+    r = FLCloudRunner(cfg, cloud_cfg=cloud or CLOUD, record=True)
+    res = r.run()
+    return r, res
+
+
+# ---------------------------------------------------------------------------
+# Declarative Policy composition.
+# ---------------------------------------------------------------------------
+class TestPolicyComposition:
+    def test_table1_policies_are_declarative(self):
+        fca = get_policy("fedcostaware")
+        assert fca.strategies == (LifecycleSpec(), BudgetScreenSpec())
+        assert get_policy("spot").strategies == ()
+        assert get_policy("on_demand").strategies == ()
+        assert get_policy("fedcostaware_async").strategies == \
+            fca.strategies
+
+    def test_boolean_views_derive_from_strategies(self):
+        fca = get_policy("fedcostaware")
+        assert fca.manage_lifecycle and fca.enforce_budgets
+        spot = get_policy("spot")
+        assert not spot.manage_lifecycle and not spot.enforce_budgets
+
+    def test_replace_keeps_strategies_and_raises_no_warning(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            p = dataclasses.replace(get_policy("fedcostaware"),
+                                    on_warning="drain")
+        assert p.on_warning == "drain"
+        assert p.strategies == get_policy("fedcostaware").strategies
+
+    def test_unknown_on_warning_names_policy(self):
+        with pytest.raises(ValueError, match="badpol"):
+            Policy("badpol", on_warning="explode")
+        assert "checkpoint" in ON_WARNING_MODES
+
+    def test_unknown_engine_rejected_at_construction(self):
+        """Satellite: an unknown engine key fails at Policy
+        construction (naming the policy), not deep inside the runner."""
+        with pytest.raises(ValueError, match="mypolicy.*no_such_engine"):
+            Policy("mypolicy", engine="no_such_engine")
+
+    def test_known_engines_accepted(self):
+        for engine in ("sync", "async_buffered", "fedbuff"):
+            assert Policy(f"p_{engine}", engine=engine).engine == engine
+
+    def test_non_spec_strategy_rejected(self):
+        with pytest.raises(ValueError, match="StrategySpec"):
+            Policy("p", strategies=("lifecycle",))
+
+    def test_register_policy(self):
+        p = Policy("registered_test_policy", pick_cheapest_zone=True,
+                   strategies=(BudgetScreenSpec(),))
+        register_policy(p, overwrite=True)
+        assert get_policy("registered_test_policy") is p
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy(p)
+        POLICIES.pop("registered_test_policy")
+
+
+class TestLegacyBooleanShim:
+    def test_positional_boolean_construction_warns_and_maps(self):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            p = Policy("legacy", False, True, True, True)
+        assert p.strategies == (LifecycleSpec(), BudgetScreenSpec())
+        assert p.pick_cheapest_zone and not p.on_demand
+        assert p.manage_lifecycle and p.enforce_budgets
+
+    def test_legacy_equals_declarative(self):
+        with pytest.warns(DeprecationWarning):
+            legacy = Policy("fedcostaware", False, True, True, True)
+        assert legacy == get_policy("fedcostaware")
+
+    def test_false_flags_map_to_empty_composition(self):
+        with pytest.warns(DeprecationWarning):
+            p = Policy("spotlike", False, False, False, True)
+        assert p.strategies == ()
+        assert p.pick_cheapest_zone and not p.on_demand
+        assert p == dataclasses.replace(get_policy("spot"),
+                                        name="spotlike")
+
+    def test_flags_and_strategies_together_rejected(self):
+        with pytest.raises(ValueError, match="not both"):
+            Policy("p", manage_lifecycle=True,
+                   strategies=(LifecycleSpec(),))
+
+    def test_declarative_construction_warns_nothing(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            Policy("quiet", pick_cheapest_zone=True,
+                   strategies=(LifecycleSpec(),))
+
+
+# ---------------------------------------------------------------------------
+# Directives + executor behavior, through full runs.
+# ---------------------------------------------------------------------------
+class TestDirectives:
+    def test_directive_dataclasses(self):
+        for d in (SpinUp("c"), Terminate("c"), PreWarm("c", 5.0),
+                  Checkpoint("c"), Drain("c"), ScreenOut("c", 2)):
+            assert isinstance(d, Directive) and d.client == "c"
+        assert Terminate("c", standby=True).standby
+
+    def test_specs_build_matching_strategies(self):
+        p = get_policy("fedcostaware")
+        assert isinstance(LifecycleSpec().build(p), LifecycleStrategy)
+        assert isinstance(BudgetScreenSpec().build(p), BudgetScreen)
+        wr = WarningReactionSpec().build(
+            dataclasses.replace(p, on_warning="drain"))
+        assert isinstance(wr, WarningReaction) and wr.mode == "drain"
+        assert WarningReactionSpec(mode="checkpoint").build(p).mode == \
+            "checkpoint"
+        assert isinstance(ForecastPrewarmSpec().build(p),
+                          ForecastPrewarmStrategy)
+
+    def test_default_streams_carry_no_directive_events(self):
+        r, _ = run_recorded("fedcostaware")
+        types = {rec["type"] for rec in r.recorder.records}
+        assert "DirectiveIssued" not in types
+
+    def test_trace_directives_publishes_issued_events(self):
+        r, _ = run_recorded("fedcostaware", n_epochs=5,
+                            trace_directives=True)
+        issued = [rec for rec in r.recorder.records
+                  if rec["type"] == "DirectiveIssued"]
+        kinds = {rec["kind"] for rec in issued}
+        # post-calibration non-final rounds terminate + pre-warm the
+        # fast client; the final round terminates without a pre-warm
+        assert {"Terminate", "PreWarm"} <= kinds
+        for rec in issued:
+            assert rec["client"] in ("slow", "fast")
+
+    def test_traced_run_totals_match_untraced(self):
+        _, res_a = run_recorded("fedcostaware")
+        _, res_b = run_recorded("fedcostaware", trace_directives=True)
+        assert res_b.total_cost == pytest.approx(res_a.total_cost,
+                                                 abs=1e-9)
+        assert res_b.makespan_s == pytest.approx(res_a.makespan_s,
+                                                 abs=1e-9)
+
+    def test_screen_out_event_order(self):
+        clients = (
+            ClientProfile("rich", 600, n_samples=2, jitter=0.0),
+            ClientProfile("poor", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        r, res = run_recorded("fedcostaware", clients=clients,
+                              n_epochs=6)
+        assert "poor" in res.excluded_clients
+        recs = r.recorder.records
+        i = next(i for i, rec in enumerate(recs)
+                 if rec["type"] == "BudgetExhausted")
+        assert recs[i]["client"] == "poor"
+        assert recs[i + 1]["type"] == "ClientScreenedOut"
+        assert recs[i + 1]["client"] == "poor"
+        assert recs[i + 1]["round_idx"] >= 1
+        # the screened client's tracked instance is torn down next
+        assert recs[i + 2]["type"] == "ClientStateChanged"
+        assert (recs[i + 2]["client"], recs[i + 2]["state"]) == \
+            ("poor", "idle")
+
+    def test_screened_out_round_trips_through_replay(self):
+        clients = (
+            ClientProfile("rich", 600, n_samples=2, jitter=0.0),
+            ClientProfile("poor", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        r, res = run_recorded("fedcostaware", clients=clients,
+                              n_epochs=6)
+        rep = replay_result(EventReplayer.loads(r.recorder.dumps()))
+        assert rep.total_cost == pytest.approx(res.total_cost, abs=1e-9)
+        assert rep.excluded_clients == res.excluded_clients
+
+
+# ---------------------------------------------------------------------------
+# Custom compositions run end-to-end with zero engine edits.
+# ---------------------------------------------------------------------------
+class TestCustomComposition:
+    def test_budget_screen_only_policy(self):
+        register_policy(Policy(
+            "budget_only_test", pick_cheapest_zone=True,
+            strategies=(BudgetScreenSpec(),)), overwrite=True)
+        clients = (
+            ClientProfile("rich", 600, n_samples=2, jitter=0.0),
+            ClientProfile("poor", 200, n_samples=1, jitter=0.0,
+                          budget=0.05),
+        )
+        r, res = run_recorded("budget_only_test", clients=clients,
+                              n_epochs=6)
+        assert "poor" in res.excluded_clients
+        # no lifecycle component: nothing ever enters "savings"
+        assert not any(rec.get("state") == "savings"
+                       for rec in r.recorder.records
+                       if rec["type"] == "ClientStateChanged")
+        POLICIES.pop("budget_only_test")
+
+    def test_custom_strategy_class_via_spec(self):
+        """A user-defined strategy plugs in through a spec — the
+        extension path new disciplines use."""
+        seen = []
+
+        class CountingStrategy(SchedulingStrategy):
+            def on_client_result(self, client, t, more_rounds):
+                seen.append((client, t))
+                return []
+
+        @dataclasses.dataclass(frozen=True)
+        class CountingSpec(StrategySpec):
+            def build(self, policy):
+                return CountingStrategy()
+
+        register_policy(Policy(
+            "counting_test", pick_cheapest_zone=True,
+            strategies=(CountingSpec(),)), overwrite=True)
+        _, res = run_recorded("counting_test")
+        assert res.rounds_completed == 3
+        # one result report per client per round except round-closers
+        assert len(seen) == sum(len(p) - 1
+                                for p in res.per_round_participants)
+        POLICIES.pop("counting_test")
+
+
+# ---------------------------------------------------------------------------
+# §III-D pre-warm rescheduling edges (satellite).
+# ---------------------------------------------------------------------------
+class TestPrewarmReschedulingEdges:
+    def _sched_with_prewarm(self):
+        sched = make_scheduler(get_policy("fedcostaware"),
+                               SchedulerConfig(t_threshold_s=10.0,
+                                               t_buffer_s=30.0),
+                               spin_up_prior=120.0)
+        for c, t in [("slow", 1000.0), ("fast", 100.0),
+                     ("crash", 800.0)]:
+            sched.est.observe_epoch(c, t, cold=False)
+            sched.est.observe_spin_up(c, 120.0)
+        sched.begin_round(5)
+        for c in ("slow", "fast", "crash"):
+            sched.register_dispatch(c, 0.0, False, False)
+        prewarm_t = sched.evaluate_termination("fast", 100.0,
+                                               more_rounds=True)
+        assert prewarm_t == pytest.approx(850.0)
+        return sched
+
+    def test_earlier_move_is_deliberately_not_applied(self):
+        """The `new_t > old_t` guard is intentional: a pre-warm target
+        is a *cost floor* — §III-D exists to avoid late arrivals, and
+        firing earlier than originally promised only buys idle
+        instance-seconds. When the schedule contracts (the slowest
+        client beats its estimate), the queued target stays put."""
+        sched = self._sched_with_prewarm()
+        # the slowest client finishes far earlier than its estimate,
+        # contracting F_s from 1000 to 600
+        sched.on_result("slow", 600.0, 600.0, cold=False,
+                        spin_up_observed=None)
+        moved = sched.on_preemption_recovery("crash", 650.0)
+        assert moved == {}
+        assert sched.prewarm_queue["fast"] == pytest.approx(850.0)
+
+    def test_later_move_still_applies(self):
+        sched = self._sched_with_prewarm()
+        moved = sched.on_preemption_recovery("crash", 2000.0)
+        assert moved["fast"] == pytest.approx(2000.0 - 120.0 - 30.0)
+        assert sched.prewarm_queue["fast"] == moved["fast"]
+
+    def test_recovery_after_all_prewarms_fired_is_noop(self):
+        """A recovery landing after every queued pre-warm already spun
+        its instance up must not double-request: the moved target
+        re-fires, sees the client already tracked, and no-ops."""
+        sim_cloud = CloudConfig(spot_rate_sigma=0.0, spin_up_sigma=0.0)
+        from repro.cloud.simulator import CloudSimulator
+        sim = CloudSimulator(sim_cloud, seed=0)
+        policy = get_policy("fedcostaware")
+        sched = make_scheduler(policy, SchedulerConfig())
+        profiles = {"x": ClientProfile("x", 100.0)}
+        cluster = ClusterManager(sim, policy, profiles, sched)
+        sched.prewarm_queue["x"] = 100.0
+        cluster.schedule_prewarm("x", 100.0)
+        sim.run_until_idle()
+        assert cluster.instance_of("x") is not None
+        n_before = len(sim.instances_of("x"))
+        assert n_before == 1
+        # late §III-D move arrives after the fire: reschedule + drain
+        sched.prewarm_queue["x"] = sim.now + 500.0
+        cluster.schedule_prewarm("x", sim.now + 500.0)
+        sim.run_until_idle()
+        assert len(sim.instances_of("x")) == n_before
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-aware cost accounting (satellite).
+# ---------------------------------------------------------------------------
+# the preemption_realism pinned scenario, with storage rates attached
+CKPT_CLIENTS = (
+    ClientProfile("a", mean_epoch_s=900.0, jitter=0.0, n_samples=2,
+                  zone="us-east-1a"),
+    ClientProfile("b", mean_epoch_s=400.0, jitter=0.0, n_samples=1,
+                  zone="us-east-1b"),
+)
+CKPT_SCHED = SchedulerConfig(checkpoint_every_s=600.0,
+                             warning_ckpt_write_s=10.0,
+                             warning_ckpt_size_mb=100.0)
+PUT_USD, EGRESS_USD_PER_MB = 0.000005, 0.00009
+
+
+def ckpt_cloud(put=PUT_USD, egress=EGRESS_USD_PER_MB):
+    market = MarketConfig(providers=(ProviderConfig(
+        name="aws",
+        price_trace=str(FIXTURE_PRICES / "aws.csv"),
+        interruption_trace=str(FIXTURE_PRICES / "aws.interruptions.csv"),
+        preemption_notice_s=120.0,
+        storage_put_usd=put,
+        storage_egress_usd_per_mb=egress),))
+    return CloudConfig(spot_rate_sigma=0.0, spin_up_sigma=0.0,
+                       preemption_model="replay", market=market)
+
+
+def run_ckpt(mode="checkpoint", put=PUT_USD, egress=EGRESS_USD_PER_MB):
+    cfg = FLRunConfig(dataset="ckpt_cost", clients=CKPT_CLIENTS,
+                      n_epochs=3, policy="spot", seed=0,
+                      on_warning=mode)
+    r = FLCloudRunner(cfg, cloud_cfg=ckpt_cloud(put, egress),
+                      sched_cfg=CKPT_SCHED, record=True)
+    return r, r.run()
+
+
+class TestCheckpointCostAccounting:
+    def test_storage_rates_checkpoint_cost(self):
+        rates = StorageRates(put_usd=0.01, egress_usd_per_mb=0.001)
+        assert rates.checkpoint_cost(100.0) == pytest.approx(0.11)
+        assert StorageRates().checkpoint_cost(1e6) == 0.0
+
+    def test_provider_carries_storage_rates(self):
+        pc = ProviderConfig(name="aws", storage_put_usd=0.5,
+                            storage_egress_usd_per_mb=0.25)
+        p = Provider.from_provider_config(pc)
+        assert p.storage == StorageRates(0.5, 0.25)
+        # legacy scalar CloudConfig providers stay free
+        assert Provider.from_cloud_config(CLOUD).storage == \
+            StorageRates()
+
+    def test_checkpoint_writes_are_billed(self):
+        r, res = run_ckpt()
+        ckpts = [rec for rec in r.recorder.records
+                 if rec["type"] == "ClientCheckpointed"]
+        assert ckpts, "scenario must produce warning checkpoints"
+        per_write = PUT_USD + 100.0 * EGRESS_USD_PER_MB
+        want = len(ckpts) * per_write
+        assert res.checkpoint_cost == pytest.approx(want, abs=1e-12)
+        # included in the run's dollar totals
+        assert r.accountant.checkpoint_cost_total() == \
+            pytest.approx(want, abs=1e-12)
+        billed = [rec for rec in r.recorder.records
+                  if rec["type"] == "CheckpointBilled"]
+        assert len(billed) == len(ckpts)
+        for rec in billed:
+            assert rec["amount"] == pytest.approx(per_write, abs=1e-12)
+        for rec in ckpts:
+            assert rec["size_mb"] == pytest.approx(100.0)
+            # billed against the provider that wrote the snapshot
+            assert rec["provider"] == "aws"
+
+    def test_checkpoint_cost_included_in_totals(self):
+        _, free = run_ckpt(put=0.0, egress=0.0)
+        _, paid = run_ckpt()
+        assert free.checkpoint_cost == 0.0
+        assert paid.total_cost == pytest.approx(
+            free.total_cost + paid.checkpoint_cost, abs=1e-9)
+
+    def test_replay_rebuilds_checkpoint_cost_without_market(self):
+        r, res = run_ckpt()
+        rep = replay_result(EventReplayer.loads(r.recorder.dumps()))
+        assert rep.checkpoint_cost == pytest.approx(
+            res.checkpoint_cost, abs=1e-12)
+        assert rep.total_cost == pytest.approx(res.total_cost, abs=1e-9)
+        for c in res.per_client_cost:
+            assert rep.per_client_cost[c] == pytest.approx(
+                res.per_client_cost[c], abs=1e-9)
+
+    def test_default_rates_keep_checkpoints_free(self):
+        _, res = run_ckpt(put=0.0, egress=0.0)
+        assert res.checkpoint_cost == 0.0
+
+    def test_drain_vs_checkpoint_tradeoff_includes_storage(self):
+        """The Table-1 trade-off surface: both modes pay the same
+        per-write storage dollars, so the drain-vs-checkpoint cost
+        comparison now includes them."""
+        _, ck = run_ckpt("checkpoint")
+        _, dr = run_ckpt("drain")
+        assert ck.checkpoint_cost > 0 and dr.checkpoint_cost > 0
