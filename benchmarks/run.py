@@ -4,7 +4,8 @@ report. Prints ``name,value,derived`` CSV blocks.
   table1   — Table I cost comparison (4 datasets x 3 policies)
   fig4     — client-state timeline (Fed-ISIC2019)
   fig5     — cumulative per-client costs (Fed-ISIC2019)
-  scaling  — beyond-paper: cost savings vs client-pool size & skew
+  scaling  — fleet-core wall/RSS curve (BENCH_scaling.json) + the
+             beyond-paper savings-vs-skew study
   roofline — per (arch x shape x mesh) roofline terms from the dry-run
 """
 from __future__ import annotations
@@ -36,9 +37,11 @@ def main() -> None:
         fig5_costs.main([])
 
     if "scaling" in want:
-        section("Beyond-paper: savings vs pool size / heterogeneity")
+        section("Fleet core: wall-clock / RSS scaling -> BENCH_scaling.json")
         from benchmarks import scaling
-        scaling.main()
+        scaling.main([])
+        section("Beyond-paper: savings vs pool size / heterogeneity")
+        scaling.main(["--savings"])
 
     if "preemption" in want:
         section("Beyond-paper: robustness vs spot preemption rate")

@@ -24,10 +24,12 @@ trace terminates every instance, so no open segment is ever priced).
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Callable, Dict, Optional, Set
+from typing import Callable, Dict, Optional, Sequence, Set
+
+import numpy as np
 
 from repro.core.events import (BillingTick, CheckpointBilled,
-                               ClientCheckpointed, EventBus,
+                               ClientCheckpointed, EventBus, FleetStepSummary,
                                InstancePreempted, InstanceReady,
                                InstanceTerminated)
 from repro.cloud.pricing import SpotMarket
@@ -65,6 +67,7 @@ class CostAccountant:
         bus.subscribe(InstancePreempted, self._on_closed)
         bus.subscribe(ClientCheckpointed, self._on_checkpointed)
         bus.subscribe(CheckpointBilled, self._on_checkpoint_billed)
+        bus.subscribe(FleetStepSummary, self._on_fleet_step)
 
     # ------------------------------------------------------------------
     # Event handlers.
@@ -106,6 +109,40 @@ class CostAccountant:
         and replay alike)."""
         self._ckpt[ev.client] += ev.amount
         self._ckpt_total += ev.amount
+
+    def _on_fleet_step(self, ev: FleetStepSummary):
+        """Replay mode only: fold one fleet step's *settled* dollars
+        (schema v5 aggregate trace). A live fleet run settles the same
+        dollars through `settle_batch` with per-client attribution, so
+        a live (priced) accountant ignores the summary — folding both
+        would double count. Per-client attribution is not carried by
+        the summary: replayed `total_cost` matches the live run, and
+        replayed `client_cost` stays zero, by design."""
+        if self._prices is not None:
+            return
+        self._closed_total += ev.cost_delta
+
+    # ------------------------------------------------------------------
+    # Batched settlement (the fleet core's path into the same totals).
+    # ------------------------------------------------------------------
+    def settle_batch(self, clients: Sequence[str],
+                     amounts: np.ndarray) -> float:
+        """Fold a whole step's closed billing segments at once:
+        `amounts[i]` dollars settle for `clients[i]`. Per-client dict
+        updates are grouped with `np.unique`/`np.bincount`, so the
+        Python-level work is O(distinct clients), not O(segments).
+        Returns the total settled."""
+        amounts = np.asarray(amounts, dtype=np.float64)
+        if len(amounts) == 0:
+            return 0.0
+        uniq, inv = np.unique(np.asarray(clients, dtype=object),
+                              return_inverse=True)
+        sums = np.bincount(inv, weights=amounts, minlength=len(uniq))
+        for c, a in zip(uniq, sums):
+            self._closed[c] += float(a)
+        total = float(amounts.sum())
+        self._closed_total += total
+        return total
 
     # ------------------------------------------------------------------
     # Queries.

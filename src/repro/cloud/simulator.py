@@ -31,6 +31,7 @@ import dataclasses
 import heapq
 import itertools
 import math
+from collections import defaultdict
 from typing import Callable, Dict, List, Optional, Union
 
 import numpy as np
@@ -89,6 +90,15 @@ class CloudSimulator:
         self._instances: Dict[int, Instance] = {}
         self._iid = itertools.count(1)
         self.event_log: List[dict] = []
+        # aggregate-query indexes: per-client instance lists, running
+        # settled-cost accumulators, and the set of instances with an
+        # open billing segment — total_cost/client_cost/instances_of
+        # are O(open)/O(k) instead of scanning every instance ever made
+        self._by_client: Dict[str, List[Instance]] = defaultdict(list)
+        self._settled_total = 0.0
+        self._settled_by_client: Dict[str, float] = defaultdict(float)
+        self._open_by_client: Dict[str, Dict[int, Instance]] = (
+            defaultdict(dict))
 
     @property
     def prices(self) -> SpotMarket:
@@ -151,6 +161,7 @@ class CloudSimulator:
                         provider=self.market.resolve_provider(zone,
                                                               provider))
         self._instances[inst.iid] = inst
+        self._by_client[inst.client].append(inst)
         spin = self.sample_spin_up()
         self._log("request", inst)
         self.bus.publish(InstanceRequested(self.now, inst))
@@ -161,6 +172,7 @@ class CloudSimulator:
             inst.state = RUNNING
             inst.t_ready = self.now
             inst._billing_from = self.now
+            self._open_by_client[inst.client][inst.iid] = inst
             self._log("ready", inst)
             if not inst.on_demand:
                 self._schedule_preemption(inst)
@@ -237,6 +249,9 @@ class CloudSimulator:
                                   inst.on_demand, provider=inst.provider)
         inst.cost += amount
         inst._billing_from = None
+        self._settled_total += amount
+        self._settled_by_client[inst.client] += amount
+        self._open_by_client[inst.client].pop(inst.iid, None)
         self.bus.publish(BillingTick(self.now, inst, inst.client,
                                      t0, t0 + billed, amount))
 
@@ -248,20 +263,33 @@ class CloudSimulator:
                                   inst.on_demand, provider=inst.provider)
         return c
 
+    def _open_cost(self, inst: Instance) -> float:
+        """Price of the instance's open billing segment (0 if closed)."""
+        if inst._billing_from is None:
+            return 0.0
+        return self.market.cost(inst.zone, inst._billing_from, self.now,
+                                inst.on_demand, provider=inst.provider)
+
     def client_cost(self, client: str) -> float:
-        """Legacy O(all instances) scan. Hot paths should query a
-        `repro.cloud.accounting.CostAccountant` subscribed to the bus
-        instead (see benchmarks/accounting_bench.py for the gap)."""
-        return sum(self.accrued_cost(i) for i in self._instances.values()
-                   if i.client == client)
+        """Settled accumulator + the client's open segments: O(open
+        instances of `client`), not a scan of every instance ever made
+        (see benchmarks/accounting_bench.py for the old gap)."""
+        return (self._settled_by_client[client]
+                + sum(self._open_cost(i)
+                      for i in self._open_by_client[client].values()))
 
     def total_cost(self) -> float:
-        """Legacy O(all instances) scan; see `client_cost`."""
-        return sum(self.accrued_cost(i) for i in self._instances.values())
+        """Settled accumulator + all open segments: O(currently open
+        instances); see `client_cost`."""
+        open_cost = sum(self._open_cost(i)
+                        for open_map in self._open_by_client.values()
+                        for i in open_map.values())
+        return self._settled_total + open_cost
 
     def instances_of(self, client: str) -> List[Instance]:
-        """Every instance (any state) ever created for `client`."""
-        return [i for i in self._instances.values() if i.client == client]
+        """Every instance (any state) ever created for `client` —
+        served from the per-client index in O(k)."""
+        return list(self._by_client[client])
 
     # ------------------------------------------------------------------
     def _log(self, kind: str, inst: Instance):

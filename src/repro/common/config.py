@@ -264,6 +264,33 @@ class MarketConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PopulationConfig:
+    """A large client population described by distribution parameters
+    instead of per-client `ClientProfile` objects (the cross-silo ->
+    cross-device jump).
+
+    The fleet core (`repro.cloud.fleet.ClientArrays`) expands this into
+    contiguous numpy arrays in O(arrays) — constructing a 100k-client
+    run never materializes 100k Python objects. Per-client warm epoch
+    times are lognormal around `mean_epoch_s` with cross-client sigma
+    `epoch_sigma` (0 makes the population homogeneous), drawn from
+    `seed` so a population is reproducible independent of the run
+    seed."""
+    n_clients: int
+    mean_epoch_s: float = 900.0
+    epoch_sigma: float = 0.25      # cross-client lognormal spread
+    cold_multiplier: float = 1.15
+    jitter: float = 0.03           # per-epoch lognormal sigma (per run)
+    budget: float = float("inf")   # USD, uniform across the population
+    name_prefix: str = "c"         # client i is f"{name_prefix}{i}"
+    seed: int = 0                  # population draw seed
+
+    def __post_init__(self):
+        if self.n_clients <= 0:
+            raise ValueError("population needs n_clients >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class CloudConfig:
     on_demand_rate: float = 1.008        # $/hr g5.xlarge (paper Table I)
     spot_rate_mean: float = 0.3951       # $/hr
@@ -289,6 +316,14 @@ class CloudConfig:
     # legacy single-provider synthetic market built from the scalar
     # fields above (bit-identical to the pre-SpotMarket behavior)
     market: Optional[MarketConfig] = None
+    # fleets at or above this many clients switch from the per-object
+    # simulator hot path (one heap callback per instance, per-instance
+    # events — bit-identical to every pre-fleet release) to the
+    # struct-of-arrays fleet core (`repro.cloud.fleet`), which batches
+    # spin-ups, billing and preemption draws per round and publishes
+    # aggregate `FleetStepSummary` events instead of the per-instance
+    # vocabulary. `FLRunConfig.fleet` overrides the switch per run.
+    fleet_threshold: int = 512
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,4 +376,31 @@ class FLRunConfig:
     # the DirectiveExecutor applies (observability; off by default so
     # recorded streams and golden traces stay unchanged)
     trace_directives: bool = False
+    # cross-device cohort mode (fleet core): a large client population
+    # described by distribution parameters instead of `clients`
+    # profiles; each round samples `cohort_size` participants from it.
+    # Setting `population` requires `clients == ()` and engages the
+    # vectorized fleet path regardless of `fleet_threshold`.
+    population: Optional[PopulationConfig] = None
+    # participants sampled (without replacement, seeded) per round from
+    # the population — None means every active client trains each round
+    cohort_size: Optional[int] = None
+    # fleet-path switch: None auto-selects (population set, or at least
+    # `CloudConfig.fleet_threshold` clients on a sync-engine policy);
+    # True forces the vectorized core even for tiny runs (equivalence
+    # tests); False forces the per-object path at any scale
+    fleet: Optional[bool] = None
     seed: int = 0
+
+    def __post_init__(self):
+        if self.population is not None and self.clients:
+            raise ValueError(
+                "FLRunConfig: pass either explicit `clients` profiles "
+                "or a `population`, not both")
+        if self.cohort_size is not None:
+            n = (self.population.n_clients if self.population is not None
+                 else len(self.clients))
+            if not 0 < self.cohort_size <= n:
+                raise ValueError(
+                    f"cohort_size must be in [1, {n}], "
+                    f"got {self.cohort_size}")

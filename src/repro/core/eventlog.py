@@ -48,8 +48,15 @@ from repro.core.events import EVENT_TYPES, Event, EventBus
 #        logs (golden copies under tests/golden/v1..v3) replay
 #        unchanged; fields absent from older logs take their
 #        dataclass defaults on decode.
-SCHEMA_VERSION = 4
-SUPPORTED_SCHEMAS = (1, 2, 3, 4)
+#   v5 — fleet-core vocabulary: FleetStepSummary (aggregate per-step
+#        lifecycle counts + settled cost deltas per provider/zone,
+#        emitted by the struct-of-arrays fleet path above
+#        `CloudConfig.fleet_threshold` in place of per-instance
+#        events). Purely additive — v1–v4 logs (golden copies under
+#        tests/golden/v1..v4) replay unchanged, and sub-threshold runs
+#        still record the exact per-instance vocabulary.
+SCHEMA_VERSION = 5
+SUPPORTED_SCHEMAS = (1, 2, 3, 4, 5)
 
 _SCALARS = (bool, int, float, str)
 

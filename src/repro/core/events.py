@@ -238,6 +238,31 @@ class CheckpointBilled(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetStepSummary(Event):
+    """Aggregate fleet telemetry for one simulation step (one FL round
+    of the vectorized fleet core, schema v5).
+
+    Above `CloudConfig.fleet_threshold` the struct-of-arrays hot path
+    (`repro.cloud.fleet`) batches thousands of instance lifecycles per
+    step; publishing the per-instance vocabulary would cost more than
+    the simulation itself, so the fleet emits one summary per step
+    instead: lifecycle counts, the dollars *settled* this step
+    (`cost_delta`; the sum over a complete run equals the run's total
+    cost, which is what replay accounting folds), and per-"provider/
+    zone" breakdowns. `open_accrued` is the informational accrued cost
+    of still-open billing segments at step end — replay consumers must
+    not fold it (those dollars settle in a later step's delta)."""
+    step_idx: int                # round index of the fleet step
+    n_clients: int               # participants (cohort) this step
+    n_spinups: int               # fresh instances requested
+    n_preemptions: int           # spot reclaims absorbed
+    n_terminations: int          # deliberate (Listing-1 / final) stops
+    cost_delta: float            # dollars settled during this step
+    open_accrued: float          # accrued-but-unsettled dollars, step end
+    by_zone: Mapping[str, Mapping[str, float]]  # "provider/zone" -> aggs
+
+
+@dataclasses.dataclass(frozen=True)
 class RunCompleted(Event):
     """Terminal event carrying the run summary.
 
@@ -264,7 +289,7 @@ EVENT_TYPES: Dict[str, Type[Event]] = {
         ClientPreemptionWarning, ClientLost, ClientCheckpointed,
         ClientResumedFromCheckpoint, RoundStarted, RoundCompleted,
         ClientStateChanged, BudgetExhausted, ClientScreenedOut,
-        DirectiveIssued, CheckpointBilled, RunCompleted,
+        DirectiveIssued, CheckpointBilled, FleetStepSummary, RunCompleted,
     )
 }
 

@@ -106,12 +106,7 @@ class ClusterManager:
                 self.sim.schedule(self.sim.now,
                                   lambda: self._announce_ready(sb))
             return sb
-        prof = self.profiles[client]
-        zone, provider = prof.zone, prof.provider
-        if zone is None and self.policy.pick_cheapest_zone:
-            z, _ = self.sim.market.cheapest_zone(
-                self.sim.now, providers=self._placement_providers())
-            zone, provider = z.name, z.provider
+        zone, provider = self._placement(self.profiles[client])
         inst = self.sim.request_instance(client, zone=zone,
                                          on_demand=self.policy.on_demand,
                                          provider=provider)
@@ -123,6 +118,19 @@ class ClusterManager:
             ClientStateChanged(self.sim.now, client, "spinup"))
         return inst
 
+    def _placement(self, prof: ClientProfile):
+        """Resolve a client's (zone, provider) placement: the pinned
+        pair when set, else — under cheapest-zone policies — the
+        cheapest zone across the providers the policy allows. A (None,
+        None) answer defers to the simulator's own cheapest-zone
+        fallback."""
+        zone, provider = prof.zone, prof.provider
+        if zone is None and self.policy.pick_cheapest_zone:
+            z, _ = self.sim.market.cheapest_zone(
+                self.sim.now, providers=self._placement_providers())
+            zone, provider = z.name, z.provider
+        return zone, provider
+
     def request_standby(self, client: str) -> Optional[Instance]:
         """Spin up a standby replacement next to the client's tracked
         instance (forecast pre-warming). At most one standby per
@@ -133,12 +141,7 @@ class ClusterManager:
             return existing
         if self.instances.get(client) is None:
             return None
-        prof = self.profiles[client]
-        zone, provider = prof.zone, prof.provider
-        if zone is None and self.policy.pick_cheapest_zone:
-            z, _ = self.sim.market.cheapest_zone(
-                self.sim.now, providers=self._placement_providers())
-            zone, provider = z.name, z.provider
+        zone, provider = self._placement(self.profiles[client])
         inst = self.sim.request_instance(client, zone=zone,
                                          on_demand=self.policy.on_demand,
                                          provider=provider)

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.checkpoint.store import MemoryStore, ObjectStore
 from repro.cloud.accounting import CostAccountant
+from repro.cloud.pricing import SpotMarket
 from repro.cloud.simulator import CloudSimulator
 from repro.common.config import CloudConfig, FLRunConfig, SchedulerConfig
 from repro.core.events import EventBus, RunCompleted
@@ -57,6 +58,7 @@ from repro.core.policies import Policy, get_policy, make_scheduler
 from repro.core.strategy import StrategyContext, StrategyStack
 from repro.fl.cluster import ClusterManager, DirectiveExecutor
 from repro.fl.engines import EngineContext, get_engine
+from repro.fl.fleet import FleetRunner, fleet_supported
 from repro.fl.telemetry import Segment, TimelineRecorder
 from repro.fl.types import RunResult, TrainerHooks
 
@@ -92,6 +94,40 @@ class FLCloudRunner:
         # (checkpoint.snapshots); callers may pass a FileStore to keep
         # them on disk
         self.ckpt_store = ckpt_store or MemoryStore()
+
+        # fleet dispatch: population runs, fleet=True, or explicit
+        # client lists at/above CloudConfig.fleet_threshold under a
+        # fleet-capable policy take the struct-of-arrays hot path
+        # (repro.fl.fleet) instead of the per-object event stack below
+        self._fleet: Optional[FleetRunner] = None
+        if self._fleet_mode():
+            if hooks is not None:
+                raise ValueError(
+                    "the fleet path does not support TrainerHooks; "
+                    "pass fleet=False to force the per-object engines")
+            self.bus = EventBus()
+            self.recorder = None
+            if record or record_to is not None:
+                self.recorder = EventRecorder(self.bus, meta={
+                    "dataset": run_cfg.dataset, "policy": run_cfg.policy,
+                    "seed": seed, "n_epochs": run_cfg.n_epochs,
+                    "clients": [c.name for c in run_cfg.clients]})
+            market = SpotMarket.for_cloud_config(self.cloud_cfg,
+                                                 seed=seed)
+            self._fleet = FleetRunner(run_cfg, self.cloud_cfg,
+                                      self.sched_cfg, self.policy,
+                                      market, self.bus, seed)
+            # the per-object layers are never built on this path
+            self.sim = None
+            self.accountant = None
+            self.scheduler = None
+            self.cluster = None
+            self.executor = None
+            self.strategies = None
+            self.timeline = None
+            self.engine = None
+            self.hooks = hooks
+            return
 
         # layer wiring — construction order fixes bus subscription order:
         # the recorder (wildcard) sees everything first, accounting sees
@@ -156,6 +192,35 @@ class FLCloudRunner:
             ckpt_store=self.ckpt_store))
 
     # ------------------------------------------------------------------
+    def _fleet_mode(self) -> bool:
+        """Decide the execution path: `FLRunConfig.fleet` forces it
+        either way (population runs and cohort sampling *require* the
+        fleet path); with no override, explicit client lists at or
+        above `CloudConfig.fleet_threshold` under a fleet-capable
+        policy are auto-promoted."""
+        rc = self.run_cfg
+        if rc.fleet is False:
+            if rc.population is not None:
+                raise ValueError(
+                    "population runs require the fleet path; "
+                    "fleet=False is contradictory")
+            mode = False
+        elif rc.population is not None or rc.fleet is True:
+            if not fleet_supported(self.policy):
+                raise ValueError(
+                    f"policy {self.policy.name!r} cannot run on the "
+                    f"fleet path (sync engine, on_warning='ignore', "
+                    f"lifecycle/budget strategies only)")
+            mode = True
+        else:
+            mode = (fleet_supported(self.policy)
+                    and len(rc.clients) >= self.cloud_cfg.fleet_threshold)
+        if rc.cohort_size is not None and not mode:
+            raise ValueError("cohort_size requires the fleet path "
+                             "(population runs or fleet=True)")
+        return mode
+
+    # ------------------------------------------------------------------
     def _hazard_of(self, client: str) -> float:
         """The reclaim hazard (events/hour) forecast for the client's
         tracked spot instance right now; 0 when untracked or
@@ -185,6 +250,20 @@ class FLCloudRunner:
         """Execute the run to completion: start the engine, drain the
         simulator, publish the terminal `RunCompleted` summary, persist
         the event log if requested, and return the `RunResult`."""
+        if self._fleet is not None:
+            res = self._fleet.run()
+            # fleet-mode terminal summary: per-client costs live in
+            # RunResult.per_client_cost; the event stays aggregate
+            # (schema v5), so client_costs is deliberately empty
+            self.bus.publish(RunCompleted(
+                res.makespan_s, makespan_s=res.makespan_s,
+                total_cost=res.total_cost, client_costs={},
+                rounds_completed=res.rounds_completed,
+                excluded_clients=tuple(res.excluded_clients),
+                final_round_idx=res.rounds_completed - 1))
+            if self.record_to is not None:
+                self.recorder.dump(self.record_to)
+            return res
         self.engine.start()
         self.sim.run_until_idle()
         self.timeline.close(self.sim.now)   # no-op on complete runs

@@ -30,6 +30,8 @@ PUBLIC_MODULES = [
     "src/repro/cloud/preemption.py",
     "src/repro/cloud/traces.py",
     "src/repro/cloud/accounting.py",
+    "src/repro/cloud/fleet.py",
+    "src/repro/fl/fleet.py",
     "src/repro/fl/engines/base.py",
     "src/repro/fl/engines/__init__.py",
     "src/repro/fl/runner.py",

@@ -1,0 +1,180 @@
+"""Struct-of-arrays fleet core: equivalence against the per-object
+event stack, batched-draw identity, cohort sampling determinism,
+record/replay on the schema-v5 `FleetStepSummary` vocabulary, and the
+scaling guarantees the core exists to buy (>= 20x over the per-object
+path at n=10^4, near-linear wall-clock growth).
+"""
+import sys
+import time
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from repro.cloud.preemption import ConstantRateModel
+from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
+                                 PopulationConfig, SchedulerConfig)
+from repro.core.eventlog import EventReplayer
+from repro.fl.runner import FLCloudRunner
+from repro.fl.telemetry import replay_result
+
+# deterministic cloud: no spin-up / price / preemption randomness, so
+# the per-object and fleet paths (which own different RNG lanes) see
+# identical physics and must land on identical dollars
+DET_CLOUD = CloudConfig(spot_rate_sigma=0.0, spin_up_sigma=0.0,
+                        preemption_rate_per_hr=0.0)
+SCHED = SchedulerConfig()
+
+
+def _uniform_clients(n):
+    return tuple(ClientProfile(name=f"c{i}",
+                               mean_epoch_s=600.0 + 60.0 * (i % 7),
+                               cold_multiplier=1.15, jitter=0.0)
+                 for i in range(n))
+
+
+def _budget_clients(n):
+    """Finite budgets (screening fires) + one late joiner."""
+    return tuple(ClientProfile(name=f"c{i}",
+                               mean_epoch_s=300.0 + 250.0 * (i % 5),
+                               cold_multiplier=1.2, jitter=0.0,
+                               budget=0.55 if i % 3 == 0 else float("inf"),
+                               join_round=1 if i == 2 else 0)
+                 for i in range(n))
+
+
+def _pair(clients, policy, n_epochs, seed):
+    """Run the same config on both paths; return (per_object, fleet)."""
+    a = FLCloudRunner(FLRunConfig(dataset="s", clients=clients,
+                                  n_epochs=n_epochs, policy=policy,
+                                  seed=seed),
+                      DET_CLOUD, SCHED).run()
+    b = FLCloudRunner(FLRunConfig(dataset="s", clients=clients,
+                                  n_epochs=n_epochs, policy=policy,
+                                  seed=seed, fleet=True),
+                      DET_CLOUD, SCHED).run()
+    return a, b
+
+
+class TestEquivalence:
+    """Below the randomness the paths share no code — agreement on
+    dollars, makespan, participants, and exclusions is the oracle."""
+
+    @pytest.mark.parametrize("policy", ["on_demand", "spot",
+                                        "fedcostaware"])
+    @pytest.mark.parametrize("n", [3, 8])
+    def test_uniform_pool_matches(self, policy, n):
+        a, b = _pair(_uniform_clients(n), policy, n_epochs=5, seed=3)
+        assert b.total_cost == pytest.approx(a.total_cost, abs=1e-9)
+        assert b.makespan_s == pytest.approx(a.makespan_s, abs=1e-6)
+        for c in a.per_client_cost:
+            assert b.per_client_cost[c] == pytest.approx(
+                a.per_client_cost[c], abs=1e-9)
+        assert b.rounds_completed == a.rounds_completed
+        assert b.per_round_participants == a.per_round_participants
+
+    @pytest.mark.parametrize("policy", ["spot", "fedcostaware"])
+    @pytest.mark.parametrize("n", [4, 9])
+    def test_budgets_joins_and_lifecycle_match(self, policy, n):
+        """Budget screening, elastic join_round, and (for fedcostaware)
+        Listing-1 terminate/pre-warm all active at once."""
+        a, b = _pair(_budget_clients(n), policy, n_epochs=8, seed=7)
+        assert b.total_cost == pytest.approx(a.total_cost, abs=1e-9)
+        assert b.makespan_s == pytest.approx(a.makespan_s, abs=1e-6)
+        for c in a.per_client_cost:
+            assert b.per_client_cost[c] == pytest.approx(
+                a.per_client_cost[c], abs=1e-9)
+        assert sorted(b.excluded_clients) == sorted(a.excluded_clients)
+        assert b.per_round_participants == a.per_round_participants
+
+
+class TestBatchedDraws:
+    def test_constant_rate_batch_is_draw_identical(self):
+        """`rng.exponential(scale, size=n)` consumes the RandomState
+        stream exactly like n sequential scalar draws."""
+        model = ConstantRateModel(rate_per_hr=6.0)
+        insts = [SimpleNamespace(provider="aws", zone=f"z{i % 3}")
+                 for i in range(64)]
+        batch = model.next_preemption_delays(
+            insts, 0.0, np.random.RandomState(42))
+        rng = np.random.RandomState(42)
+        seq = [model.next_preemption_delay(i, 0.0, rng) for i in insts]
+        np.testing.assert_allclose(batch, np.array(seq), rtol=0, atol=0)
+
+    def test_zero_rate_batch_never_preempts(self):
+        model = ConstantRateModel(rate_per_hr=0.0)
+        out = model.next_preemption_delays(
+            [SimpleNamespace(provider="aws", zone="z0")] * 5, 0.0,
+            np.random.RandomState(0))
+        assert np.all(np.isinf(out))
+
+
+class TestCohortSampling:
+    POP = PopulationConfig(n_clients=5000, seed=11)
+
+    def _run(self, seed):
+        cfg = FLRunConfig(dataset="s", clients=(), n_epochs=3,
+                          policy="spot", population=self.POP,
+                          cohort_size=200, seed=seed)
+        return FLCloudRunner(cfg, DET_CLOUD, SCHED).run()
+
+    def test_same_seed_is_deterministic(self):
+        a, b = self._run(seed=5), self._run(seed=5)
+        assert a.per_round_participants == b.per_round_participants
+        assert a.total_cost == pytest.approx(b.total_cost, abs=0.0)
+
+    def test_cohorts_vary_with_seed_and_size(self):
+        a, b = self._run(seed=5), self._run(seed=6)
+        assert a.per_round_participants != b.per_round_participants
+        assert all(len(p) == 200 for p in a.per_round_participants)
+
+
+class TestRecordReplay:
+    def test_fleet_trace_replays_to_live_totals(self):
+        """A recorded fleet run replays through the replay-mode
+        accountant (folding `FleetStepSummary.cost_delta`) to the same
+        dollars; fleet traces carry no per-instance billing, so the
+        replayed per-client map is empty by design."""
+        cfg = FLRunConfig(dataset="s", clients=_uniform_clients(6),
+                          n_epochs=4, policy="fedcostaware", seed=2,
+                          fleet=True)
+        r = FLCloudRunner(cfg, DET_CLOUD, SCHED, record=True)
+        live = r.run()
+        blob = r.recorder.dumps()
+        assert '"schema": 5' in blob.splitlines()[0]
+        rep = replay_result(EventReplayer.loads(blob))
+        assert rep.total_cost == pytest.approx(live.total_cost, abs=1e-9)
+        assert rep.rounds_completed == live.rounds_completed
+        assert rep.per_client_cost == {}
+
+
+class TestScaling:
+    """The core's reason to exist: wall-clock at cross-device scale."""
+
+    def test_fleet_is_20x_faster_at_1e4(self):
+        from benchmarks.scaling import run_fleet, run_per_object
+        fleet = run_fleet(10_000, n_epochs=2, seed=0)
+        obj = run_per_object(10_000, n_epochs=2, seed=0)
+        assert obj["cost"] == pytest.approx(fleet["cost"], rel=0.05)
+        assert obj["wall_s"] / fleet["wall_s"] >= 20.0
+
+    def test_growth_is_near_linear_above_1e3(self):
+        """wall(10n) <= 15 * wall(n): one decade of clients may cost at
+        most ~1.5x-per-doubling-equivalent, i.e. the curve stays
+        near-linear (best-of-two to shave timer noise)."""
+        from benchmarks.scaling import run_fleet
+        wall = {}
+        for n in (1_000, 10_000):
+            wall[n] = min(run_fleet(n, n_epochs=3, seed=0)["wall_s"]
+                          for _ in range(2))
+        assert wall[10_000] / wall[1_000] <= 15.0
+
+    def test_100k_cohort_completes(self):
+        from benchmarks.scaling import run_fleet
+        row = run_fleet(100_000, n_epochs=2, seed=0, cohort_size=10_000)
+        assert row["cost"] > 0.0
+        assert row["wall_s"] < 60.0

@@ -34,6 +34,7 @@ GOLDEN_DIR = Path(__file__).parent / "golden"
 GOLDEN_V1_DIR = GOLDEN_DIR / "v1"
 GOLDEN_V2_DIR = GOLDEN_DIR / "v2"
 GOLDEN_V3_DIR = GOLDEN_DIR / "v3"
+GOLDEN_V4_DIR = GOLDEN_DIR / "v4"
 FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
 
 CLOUD = CloudConfig(spot_rate_sigma=0.0)
@@ -374,13 +375,52 @@ class TestSchemaV3Compat:
         publish the exact pre-redesign event bodies — only the
         header's schema field moved."""
         h3, recs3 = load_golden(f"v3/{name}")
-        h4, recs4 = load_golden(name)
+        h4, recs4 = load_golden(f"v4/{name}")
         assert h3["schema"] == 3 and h4["schema"] == 4
         assert {k: v for k, v in h3.items() if k != "schema"} == \
             {k: v for k, v in h4.items() if k != "schema"}
         assert len(recs3) == len(recs4)
         for r3, r4 in zip(recs3, recs4):
             assert_json_equal(r4, r3)
+
+
+# ---------------------------------------------------------------------------
+# v4 -> v5 compat: the fleet-core bump is purely additive (one new
+# aggregate event type, FleetStepSummary, published only by the
+# vectorized fleet path), so archived schema-4 recordings must replay
+# unchanged and differ from the regenerated v5 goldens by the header
+# alone — the acceptance proof that runs below
+# `CloudConfig.fleet_threshold` moved zero events.
+# ---------------------------------------------------------------------------
+class TestSchemaV4Compat:
+    V4_TRACES = TRACES + (FED_ISIC_TRACE,)
+
+    @pytest.mark.parametrize("name", V4_TRACES)
+    def test_v4_trace_loads(self, name):
+        rep = EventReplayer.load(GOLDEN_V4_DIR / f"{name}.events.jsonl")
+        assert rep.header["schema"] == 4
+
+    @pytest.mark.parametrize("trace", TRACES)
+    def test_v4_replay_matches_pinned_totals(self, trace):
+        rep = replay_result(GOLDEN_V4_DIR / f"{trace}.events.jsonl")
+        want = GOLDEN_TOTALS[trace]
+        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
+        for c, v in want["per_client"].items():
+            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
+
+    @pytest.mark.parametrize("name", V4_TRACES)
+    def test_v4_and_v5_streams_are_equivalent(self, name):
+        """Per-object runs publish no fleet summaries, so the four
+        Table-I policies carry the exact pre-fleet event bodies — only
+        the header's schema field moved."""
+        h4, recs4 = load_golden(f"v4/{name}")
+        h5, recs5 = load_golden(name)
+        assert h4["schema"] == 4 and h5["schema"] == 5
+        assert {k: v for k, v in h4.items() if k != "schema"} == \
+            {k: v for k, v in h5.items() if k != "schema"}
+        assert len(recs4) == len(recs5)
+        for r4, r5 in zip(recs4, recs5):
+            assert_json_equal(r5, r4)
 
 
 # ---------------------------------------------------------------------------
