@@ -61,6 +61,11 @@ class CostAccountant:
         self._ckpt_total = 0.0
         self._open: Dict[int, object] = {}          # iid -> Instance
         self._open_by_client: Dict[str, Set[int]] = defaultdict(set)
+        # fleet-step dollars folded into the total without per-client
+        # attribution (pre-v6 logs whose summaries carry no
+        # `client_cost_delta`); nonzero means `per_client()` is not the
+        # whole story — see `has_client_costs`
+        self.fleet_unattributed = 0.0
         bus.subscribe(InstanceReady, self._on_ready)
         bus.subscribe(BillingTick, self._on_billing)
         bus.subscribe(InstanceTerminated, self._on_closed)
@@ -112,15 +117,24 @@ class CostAccountant:
 
     def _on_fleet_step(self, ev: FleetStepSummary):
         """Replay mode only: fold one fleet step's *settled* dollars
-        (schema v5 aggregate trace). A live fleet run settles the same
-        dollars through `settle_batch` with per-client attribution, so
-        a live (priced) accountant ignores the summary — folding both
-        would double count. Per-client attribution is not carried by
-        the summary: replayed `total_cost` matches the live run, and
-        replayed `client_cost` stays zero, by design."""
+        (schema v6 aggregate trace). A live fleet run settles the same
+        dollars through the fleet core's own arrays, so a live (priced)
+        accountant ignores the summary — folding both would double
+        count. The step total folds from `cost_delta`; per-client
+        attribution folds from `client_cost_delta` (v6), whose values
+        sum to `cost_delta` — it must not be added to the total again.
+        A pre-v6 summary carries no attribution map: those dollars are
+        tracked as *unattributed* so consumers (`replay_result`) can
+        flag the per-client breakdown as absent instead of silently
+        reporting every client as free (the schema-v5 bug)."""
         if self._prices is not None:
             return
         self._closed_total += ev.cost_delta
+        if ev.client_cost_delta:
+            for c, a in ev.client_cost_delta.items():
+                self._closed[c] += a
+        else:
+            self.fleet_unattributed += ev.cost_delta
 
     # ------------------------------------------------------------------
     # Batched settlement (the fleet core's path into the same totals).
@@ -181,3 +195,10 @@ class CostAccountant:
         """`client_cost` for every client ever billed or running."""
         clients = set(self._closed) | set(self._open_by_client)
         return {c: self.client_cost(c) for c in clients}
+
+    def has_client_costs(self, tiny: float = 1e-12) -> bool:
+        """Whether `per_client()` accounts for every folded dollar.
+        False when fleet-step summaries without per-client attribution
+        (pre-v6 logs) contributed to the total — the breakdown is then
+        absent, not zero."""
+        return self.fleet_unattributed <= tiny

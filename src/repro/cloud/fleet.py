@@ -182,6 +182,11 @@ class FleetState:
         self._step_cost = 0.0
         self._step_by_zone: Dict[int, Dict[str, float]] = defaultdict(
             lambda: defaultdict(float))
+        # per-slot dollars settled since the last flush — the payload of
+        # FleetStepSummary.client_cost_delta (dense array + touched mask
+        # so `settle` stays a pure numpy scatter, no per-client loop)
+        self._step_settled = np.zeros(n)
+        self._step_touched = np.zeros(n, dtype=bool)
 
     # ------------------------------------------------------------------
     # Lifecycle transitions.
@@ -248,6 +253,8 @@ class FleetState:
             self._step_cost += tot
             self._step_by_zone[int(z)]["cost"] += tot
         self.settled[idx] += amounts
+        self._step_settled[idx] += amounts
+        self._step_touched[idx[amounts != 0.0]] = True
         self.billing_from[idx] = np.nan
         return amounts
 
@@ -303,16 +310,23 @@ class FleetState:
                 provider=prov)
         return out
 
-    def flush_step(self) -> Tuple[float, Dict[str, Dict[str, float]]]:
+    def flush_step(self) -> Tuple[float, Dict[str, Dict[str, float]],
+                                  np.ndarray, np.ndarray]:
         """Drain the per-step aggregates: (dollars settled since the
-        last flush, per-"provider/zone" breakdown) — the payload of one
-        `FleetStepSummary` event."""
+        last flush, per-"provider/zone" breakdown, slot indices that
+        settled nonzero dollars this step, their aligned amounts) — the
+        payload of one `FleetStepSummary` event. The amounts sum to the
+        first element (the step's `cost_delta`)."""
         by_zone = {f"{self.zone_table[z][0]}/{self.zone_table[z][1]}":
                    dict(aggs) for z, aggs in self._step_by_zone.items()}
         cost = self._step_cost
+        touched = np.nonzero(self._step_touched)[0]
+        amounts = self._step_settled[touched].copy()
+        self._step_settled[touched] = 0.0
+        self._step_touched[touched] = False
         self._step_cost = 0.0
         self._step_by_zone = defaultdict(lambda: defaultdict(float))
-        return cost, by_zone
+        return cost, by_zone, touched, amounts
 
     def resolve_zone(self, provider: Optional[str], zone: str) -> int:
         """Zone-table index of a pinned placement (provider resolved

@@ -16,7 +16,7 @@ instance, behind one small protocol:
          every instance that became RUNNING, instead of one Python
          callback per instance.
 
-Three implementations:
+Four implementations:
 
   ConstantRateModel        — the pre-model behavior: exponential
                              inter-arrival at `preemption_rate_per_hr`.
@@ -33,10 +33,24 @@ Three implementations:
                              (`SpotMarket.interruptions`, loaded from
                              `<provider>.interruptions.csv` files by
                              `repro.cloud.traces`) on the market clock.
+  CorrelatedReclaimModel   — a base hazard model composed with the
+                             market's recorded interruption schedule:
+                             background churn plus scheduled
+                             capacity-crunch reclaims that land
+                             *correlated* across every zone of the
+                             flagged provider (the `capacity_crunch`
+                             scenario generator, `cloud.scenarios`).
+
+Every model's batched path (`next_preemption_delays`) consumes the RNG
+stream exactly like sequential scalar calls — `rng.random_sample(n)` /
+`rng.exponential(scale, n)` draw in instance order — so a seeded run
+lands on the same reclaim sequence whether it crosses
+`CloudConfig.fleet_threshold` or not. tests/test_fleet.py pins the
+draw identity for all models.
 
 `build_preemption_model` resolves `CloudConfig.preemption_model`
-("constant" | "price_coupled" | "replay") into an instance bound to the
-run's `SpotMarket`.
+("constant" | "price_coupled" | "replay" | "correlated") into an
+instance bound to the run's `SpotMarket`.
 
 See docs/markets.md for the trace formats and docs/architecture.md for
 where the model sits in the event flow.
@@ -44,14 +58,13 @@ where the model sits in the event flow.
 from __future__ import annotations
 
 import bisect
-import math
 from typing import Dict, Optional, Protocol, Tuple
 
 import numpy as np
 
 from repro.cloud.pricing import SpotMarket
 
-MODEL_NAMES = ("constant", "price_coupled", "replay")
+MODEL_NAMES = ("constant", "price_coupled", "replay", "correlated")
 
 
 class PreemptionModel(Protocol):
@@ -125,11 +138,17 @@ class PriceCoupledModel:
     concentrates interruptions into price spikes (a 2x spike at `s=5`
     multiplies the hazard by 6).
 
-    Sampling uses per-step thinning on a `step_s` grid: each step
-    preempts with probability `1 - exp(-lambda * step)`. That keeps the
-    model correct under hazard clamping and arbitrary price shapes at
-    the cost of one uniform draw per step, which is cheap at simulator
-    scale.
+    Sampling discretizes the hazard onto a `step_s` grid: each step
+    preempts with probability `1 - exp(-lambda * step)`, which keeps
+    the model correct under hazard clamping and arbitrary price shapes.
+    The draw itself is a single uniform inverted through the per-step
+    failure CDF (`_zone_failure_cdf`) — scalar and batched calls
+    therefore consume the RNG stream identically (one uniform per
+    instance, in instance order), so a seeded run's reclaim sequence
+    does not depend on whether the fleet path batched the draws. The
+    pre-fix scalar path thinned step-by-step (one uniform per step),
+    which consumed the stream in a different order than the batch;
+    distributionally the two are the same.
     """
 
     def __init__(self, market: SpotMarket, base_rate_per_hr: float,
@@ -159,19 +178,18 @@ class PriceCoupledModel:
         return base * max(1.0 + s * (level - 1.0), 0.0)
 
     def next_preemption_delay(self, inst, now, rng):
-        """Thinning over `step_s` windows until a hit or the horizon."""
+        """One uniform inverted through the zone's failure CDF: the
+        first step whose cumulative failure probability exceeds the
+        draw fails at its end; a draw beyond the horizon's CDF means
+        the instance outlives the horizon (None)."""
         if self.base_rate_per_hr <= 0.0:
             return None
-        n_steps = int(self.horizon_s / self.step_s)
-        for k in range(n_steps):
-            t = now + k * self.step_s
-            lam = self.hazard(inst.provider, inst.zone, t)
-            if lam <= 0.0:
-                continue
-            p = -math.expm1(-lam * self.step_s)
-            if rng.random_sample() < p:
-                return (k + 1) * self.step_s
-        return None
+        cdf = self._zone_failure_cdf(inst.provider, inst.zone, now,
+                                     self.horizon_s)
+        k = int(np.searchsorted(cdf, rng.random_sample(), side="right"))
+        if k >= len(cdf):
+            return None
+        return (k + 1) * self.step_s
 
     def _zone_failure_cdf(self, provider: str, zone: str, now: float,
                           horizon_s: float) -> np.ndarray:
@@ -199,14 +217,14 @@ class PriceCoupledModel:
 
     def next_preemption_delays(self, insts, now, rng,
                                horizon_s: Optional[float] = None):
-        """Per-step hazard thinning over the whole batch via inverse-CDF
-        sampling: distributionally identical to the scalar loop (same
-        per-step failure probabilities) but one uniform draw per
-        instance instead of one per (instance, step). Not draw-identical
-        to sequential scalar calls — the fleet core owns its own RNG
-        lane, so that never matters. `horizon_s` overrides the model
-        horizon (the fleet passes round-scale horizons to keep the CDF
-        short)."""
+        """Inverse-CDF sampling over the whole batch: one uniform per
+        instance (`rng.random_sample(n)` consumes the RandomState
+        stream exactly like n sequential scalar draws, so the batch is
+        draw-identical to calling `next_preemption_delay` per instance
+        — pinned by tests/test_fleet.py), then one shared CDF +
+        `searchsorted` per distinct zone. `horizon_s` overrides the
+        model horizon (the fleet may pass round-scale horizons to keep
+        the CDF short)."""
         n = len(insts)
         out = np.full(n, np.inf)
         if self.base_rate_per_hr <= 0.0 or n == 0:
@@ -271,6 +289,46 @@ class ReplayInterruptionModel:
         return out
 
 
+class CorrelatedReclaimModel:
+    """Scheduled capacity-crunch reclaims on top of a base hazard.
+
+    Real provider-wide capacity crunches reclaim spot instances across
+    *every* zone of the squeezed provider at nearly the same instant —
+    a correlation no per-zone Poisson process reproduces. This model
+    composes a base `PreemptionModel` (independent background churn)
+    with the market's recorded interruption schedule
+    (`SpotMarket.interruptions`, e.g. the `capacity_crunch` scenario
+    generator's correlated reclaim times): an instance falls at
+    whichever comes first, the base model's draw or the next scheduled
+    reclaim in its zone.
+
+    The schedule lookup draws nothing, so the composition's RNG
+    consumption — and therefore the scalar/batch draw identity — is
+    exactly the base model's.
+    """
+
+    def __init__(self, market: SpotMarket, base: PreemptionModel):
+        self.market = market
+        self.base = base
+        self._sched = ReplayInterruptionModel(market)
+
+    def next_preemption_delay(self, inst, now, rng):
+        """min(base draw, next scheduled reclaim), None if neither."""
+        delays = [d for d in (self.base.next_preemption_delay(inst, now,
+                                                              rng),
+                              self._sched.next_preemption_delay(inst, now,
+                                                                rng))
+                  if d is not None]
+        return min(delays) if delays else None
+
+    def next_preemption_delays(self, insts, now, rng):
+        """Elementwise min of the base batch and the schedule batch
+        (inf stands in for None on both sides)."""
+        return np.minimum(
+            self.base.next_preemption_delays(insts, now, rng),
+            self._sched.next_preemption_delays(insts, now, rng))
+
+
 def build_preemption_model(cfg, market: SpotMarket) -> PreemptionModel:
     """Resolve `CloudConfig.preemption_model` into a model bound to
     `market`. Unknown names raise `ValueError` listing the registry."""
@@ -281,5 +339,8 @@ def build_preemption_model(cfg, market: SpotMarket) -> PreemptionModel:
         return PriceCoupledModel(market, cfg.preemption_rate_per_hr)
     if name == "replay":
         return ReplayInterruptionModel(market)
+    if name == "correlated":
+        return CorrelatedReclaimModel(
+            market, ConstantRateModel(cfg.preemption_rate_per_hr))
     raise ValueError(f"unknown preemption model {name!r}; "
                      f"known: {MODEL_NAMES}")

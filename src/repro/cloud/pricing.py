@@ -342,6 +342,17 @@ class SpotMarket:
             raise ValueError(f"unknown provider {provider!r}")
         self.interruptions[(provider, zone)] = tuple(sorted(times))
 
+    def replace_source(self, zone: str, source: PriceSource,
+                       provider: Optional[str] = None) -> None:
+        """Swap an already-registered zone's price source in place
+        (registration order, and therefore cheapest-zone tie-breaking,
+        is unchanged). The scenario generators (`cloud.scenarios`)
+        reshape markets through this hook."""
+        key = (self.resolve_provider(zone, provider), zone)
+        if key not in self._sources:
+            raise ValueError(f"zone {key} not registered")
+        self._sources[key] = source
+
     @property
     def default_provider(self) -> str:
         """Name of the first-registered provider."""
@@ -412,6 +423,10 @@ class SpotMarket:
                 for zone_name, times in build_interruption_schedule(
                         interruptions[pc.name], epoch=epoch).items():
                     m.add_interruptions(pc.name, zone_name, times)
+        if mcfg.scenario is not None:
+            # lazy import: scenarios build on this module's sources
+            from repro.cloud.scenarios import apply_scenario
+            apply_scenario(m, mcfg.scenario)
         return m
 
     @classmethod

@@ -256,11 +256,39 @@ class ProviderConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """One adversarial market scenario applied on top of a
+    `MarketConfig`'s base price processes (`repro.cloud.scenarios`).
+
+    `name` selects the generator from the scenario registry
+    ("flash_crash" | "capacity_crunch" | "diurnal" |
+    "price_inversion"); every generator is fully seeded, so the same
+    (market, scenario) pair always produces byte-identical traces and
+    reclaim schedules. `strength` scales the stress (1.0 = the
+    generator's documented default severity), `horizon_s`/`step_s` the
+    shaped trace's extent and resolution, and `provider` flags which
+    provider the scenario squeezes (capacity_crunch / price_inversion;
+    None = the market's first provider)."""
+    name: str
+    seed: int = 0
+    horizon_s: float = 48 * 3600.0
+    step_s: float = 300.0
+    strength: float = 1.0
+    provider: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class MarketConfig:
     """The spot market a run executes against: one or more providers,
     each synthetic or trace-driven. Provider order is placement
-    tie-break order (see `SpotMarket.cheapest_zone`)."""
+    tie-break order (see `SpotMarket.cheapest_zone`). `scenario`
+    optionally reshapes the built market through a seeded adversarial
+    generator (`repro.cloud.scenarios`) — flash crashes, correlated
+    capacity-crunch reclaims, diurnal cycles, cross-provider price
+    inversions — registered by name so every benchmark can request a
+    stress market by configuration alone."""
     providers: Tuple[ProviderConfig, ...] = (ProviderConfig(),)
+    scenario: Optional[ScenarioConfig] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,9 +330,11 @@ class CloudConfig:
     # which `repro.cloud.preemption.PreemptionModel` reclaims spot
     # instances: "constant" (flat Poisson at `preemption_rate_per_hr`,
     # bit-identical to the pre-model behavior), "price_coupled" (hazard
-    # scales with the zone's current spot price level), or "replay"
+    # scales with the zone's current spot price level), "replay"
     # (recorded interruption timestamps from the providers'
-    # `interruption_trace` files)
+    # `interruption_trace` files), or "correlated" (constant-rate
+    # background churn plus the market's scheduled reclaims — e.g. the
+    # `capacity_crunch` scenario's provider-wide correlated hits)
     preemption_model: str = "constant"
     # sensitivity of the legacy single-provider synthetic market under
     # the price-coupled model (multi-provider markets carry it per

@@ -55,8 +55,16 @@ from repro.core.events import EVENT_TYPES, Event, EventBus
 #        events). Purely additive — v1–v4 logs (golden copies under
 #        tests/golden/v1..v4) replay unchanged, and sub-threshold runs
 #        still record the exact per-instance vocabulary.
-SCHEMA_VERSION = 5
-SUPPORTED_SCHEMAS = (1, 2, 3, 4, 5)
+#   v6 — FleetStepSummary gains `client_cost_delta` (client -> dollars
+#        settled that step, summing to `cost_delta`), fixing the v5
+#        replay gap where fleet traces rebuilt the correct run total
+#        but reported every per-client cost as zero. Purely additive —
+#        v1–v5 logs (golden copies under tests/golden/v1..v5) replay
+#        unchanged; a v5 summary decodes with an empty map, which
+#        replay accounting surfaces as "per-client attribution absent"
+#        (`RunResult.has_client_costs=False`) instead of zeros.
+SCHEMA_VERSION = 6
+SUPPORTED_SCHEMAS = (1, 2, 3, 4, 5, 6)
 
 _SCALARS = (bool, int, float, str)
 

@@ -240,7 +240,7 @@ class CheckpointBilled(Event):
 @dataclasses.dataclass(frozen=True)
 class FleetStepSummary(Event):
     """Aggregate fleet telemetry for one simulation step (one FL round
-    of the vectorized fleet core, schema v5).
+    of the vectorized fleet core, schema v6).
 
     Above `CloudConfig.fleet_threshold` the struct-of-arrays hot path
     (`repro.cloud.fleet`) batches thousands of instance lifecycles per
@@ -251,7 +251,16 @@ class FleetStepSummary(Event):
     cost, which is what replay accounting folds), and per-"provider/
     zone" breakdowns. `open_accrued` is the informational accrued cost
     of still-open billing segments at step end — replay consumers must
-    not fold it (those dollars settle in a later step's delta)."""
+    not fold it (those dollars settle in a later step's delta).
+
+    `client_cost_delta` (schema v6) attributes the step's settled
+    dollars per client — only clients that settled a nonzero amount
+    this step appear, and the values sum to `cost_delta`. Replay
+    accounting folds the map into per-client totals (it must NOT also
+    fold it into the run total; `cost_delta` already is that sum). A
+    v5 log decodes with the empty default, which replay consumers
+    report as *unattributed* rather than pretending every client cost
+    zero dollars."""
     step_idx: int                # round index of the fleet step
     n_clients: int               # participants (cohort) this step
     n_spinups: int               # fresh instances requested
@@ -260,6 +269,9 @@ class FleetStepSummary(Event):
     cost_delta: float            # dollars settled during this step
     open_accrued: float          # accrued-but-unsettled dollars, step end
     by_zone: Mapping[str, Mapping[str, float]]  # "provider/zone" -> aggs
+    # client -> dollars settled this step (v6+; empty on v5 replays)
+    client_cost_delta: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -42,11 +42,13 @@ deterministic configs):
 Documented fleet-mode approximations (why goldens below
 `CloudConfig.fleet_threshold` stay on the per-object path): no
 per-instance events — each round publishes one `FleetStepSummary`
-(eventlog schema v5) instead; no Fig-4 timeline / Fig-5 cost-curve
-sampling; no standby instances, preemption-notice reactions or §III-D
-pre-warm-queue adjustments; `RunCompleted.client_costs` stays empty
-(per-client totals live in `RunResult.per_client_cost`, built once from
-the settled array).
+(eventlog schema v6, carrying the step's per-client settled dollars in
+`client_cost_delta` so replays rebuild `per_client_cost` exactly); no
+Fig-4 timeline / Fig-5 cost-curve sampling; no standby instances,
+preemption-notice reactions or §III-D pre-warm-queue adjustments;
+`RunCompleted.client_costs` stays empty (per-client totals live in
+`RunResult.per_client_cost`, built once from the settled array, and on
+replay from the summed step deltas).
 
 Cohort sampling (`FLRunConfig.population` + `cohort_size`) draws each
 round's participants without replacement from a dedicated RNG lane, so
@@ -396,10 +398,13 @@ class FleetRunner:
                        self._draw_spin(len(gi)))
 
     def _summary(self, t: float, step_idx: int, k: int) -> None:
-        """Publish the round's `FleetStepSummary` (schema v5): settled
-        dollars + lifecycle counts since the previous summary, plus the
-        informational open accrual at the barrier."""
-        cost_delta, by_zone = self.state.flush_step()
+        """Publish the round's `FleetStepSummary` (schema v6): settled
+        dollars + lifecycle counts since the previous summary, the
+        informational open accrual at the barrier, and the per-client
+        attribution of the settled dollars (only clients that settled
+        this step — names materialize per touched slot, not per
+        fleet)."""
+        cost_delta, by_zone, touched, amounts = self.state.flush_step()
         self.bus.publish(FleetStepSummary(
             t, step_idx, k,
             int(sum(z.get("spinups", 0.0) for z in by_zone.values())),
@@ -408,7 +413,9 @@ class FleetRunner:
                     for z in by_zone.values())),
             cost_delta,
             float(self.state.open_cost(t).sum()),
-            by_zone))
+            by_zone,
+            {self.clients.name(int(i)): float(a)
+             for i, a in zip(touched, amounts)}))
 
     # ------------------------------------------------------------------
     def run(self) -> RunResult:

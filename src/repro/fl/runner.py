@@ -253,8 +253,10 @@ class FLCloudRunner:
         if self._fleet is not None:
             res = self._fleet.run()
             # fleet-mode terminal summary: per-client costs live in
-            # RunResult.per_client_cost; the event stays aggregate
-            # (schema v5), so client_costs is deliberately empty
+            # RunResult.per_client_cost and, per step, in
+            # FleetStepSummary.client_cost_delta (schema v6) — the
+            # terminal event stays aggregate, so client_costs is
+            # deliberately empty
             self.bus.publish(RunCompleted(
                 res.makespan_s, makespan_s=res.makespan_s,
                 total_cost=res.total_cost, client_costs={},

@@ -137,14 +137,20 @@ def replay_result(source: Union[str, Path, "EventReplayer"]) -> "RunResult":
                          "(truncated recording?)")
     done = summary[-1]
     timeline.close(done.t)
-    clients = sorted(set(done.client_costs))
+    # union of the summary's clients and everyone the accountant saw a
+    # dollar for — fleet traces leave `RunCompleted.client_costs` empty
+    # and attribute through FleetStepSummary.client_cost_delta instead
+    clients = sorted(set(done.client_costs) | set(accountant.per_client()))
+    has_clients = accountant.has_client_costs()
     return RunResult(
         total_cost=accountant.total_cost(),
-        per_client_cost={c: accountant.client_cost(c) for c in clients},
+        per_client_cost=({c: accountant.client_cost(c) for c in clients}
+                         if has_clients else {}),
         makespan_s=done.makespan_s,
         timeline=timeline.segments,
         cost_curve=curve.records,
         rounds_completed=done.rounds_completed,
         excluded_clients=list(done.excluded_clients),
         per_round_participants=per_round,
-        checkpoint_cost=accountant.checkpoint_cost_total())
+        checkpoint_cost=accountant.checkpoint_cost_total(),
+        has_client_costs=has_clients)

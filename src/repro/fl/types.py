@@ -57,3 +57,8 @@ class RunResult:
     # per-MB egress, the provider's StorageRates) — a subset of
     # total_cost; rebuilt on replay from CheckpointBilled events
     checkpoint_cost: float = 0.0
+    # False when `per_client_cost` does not account for `total_cost`:
+    # a replay of a pre-v6 fleet trace folds step totals whose
+    # summaries carry no per-client attribution, so the breakdown is
+    # *absent* (empty), not a claim that every client cost zero
+    has_client_costs: bool = True

@@ -31,7 +31,13 @@ PUBLIC_MODULES = [
     "src/repro/cloud/traces.py",
     "src/repro/cloud/accounting.py",
     "src/repro/cloud/fleet.py",
+    "src/repro/cloud/scenarios.py",
     "src/repro/fl/fleet.py",
+    "src/repro/sweep/__init__.py",
+    "src/repro/sweep/spec.py",
+    "src/repro/sweep/runner.py",
+    "src/repro/sweep/stats.py",
+    "src/repro/sweep/report.py",
     "src/repro/fl/engines/base.py",
     "src/repro/fl/engines/__init__.py",
     "src/repro/fl/runner.py",
@@ -45,7 +51,8 @@ DOC_COVERAGE_FLOOR = 0.9
 
 MARKDOWN_FILES = ["README.md", "benchmarks/README.md",
                   "docs/index.md", "docs/architecture.md",
-                  "docs/events.md", "docs/markets.md"]
+                  "docs/events.md", "docs/markets.md",
+                  "docs/sweep.md"]
 
 
 # ---------------------------------------------------------------------------

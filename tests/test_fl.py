@@ -200,6 +200,7 @@ def _make_fl_setup(n_clients=3, n=900, checkpoint=False):
 
 
 class TestEndToEnd:
+    @pytest.mark.slow
     def test_fl_learns(self):
         ds, params, apply_fn, clients = _make_fl_setup()
         server = FederatedServer(params)
@@ -227,6 +228,7 @@ class TestEndToEnd:
                                 jax.tree.leaves(p_resumed)))
         assert d < 1e-4
 
+    @pytest.mark.slow
     def test_cloud_runner_with_real_training(self):
         ds, params, apply_fn, clients = _make_fl_setup()
         server = FederatedServer(params)

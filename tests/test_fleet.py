@@ -1,8 +1,9 @@
 """Struct-of-arrays fleet core: equivalence against the per-object
-event stack, batched-draw identity, cohort sampling determinism,
-record/replay on the schema-v5 `FleetStepSummary` vocabulary, and the
-scaling guarantees the core exists to buy (>= 20x over the per-object
-path at n=10^4, near-linear wall-clock growth).
+event stack, batched-draw identity across every preemption model,
+cohort sampling determinism, record/replay on the schema-v6
+`FleetStepSummary` vocabulary (including per-client settled dollars),
+and the scaling guarantees the core exists to buy (>= 20x over the
+per-object path at n=10^4, near-linear wall-clock growth).
 """
 import sys
 import time
@@ -15,7 +16,11 @@ import pytest
 REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO))
 
-from repro.cloud.preemption import ConstantRateModel
+from repro.cloud.preemption import (ConstantRateModel,
+                                    CorrelatedReclaimModel,
+                                    PriceCoupledModel,
+                                    ReplayInterruptionModel)
+from repro.cloud.pricing import SpotMarket
 from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
                                  PopulationConfig, SchedulerConfig)
 from repro.core.eventlog import EventReplayer
@@ -112,6 +117,59 @@ class TestBatchedDraws:
             np.random.RandomState(0))
         assert np.all(np.isinf(out))
 
+    @staticmethod
+    def _market():
+        m = SpotMarket.synthetic(CloudConfig(n_zones=3), seed=9)
+        for z in m.zones:
+            m.add_interruptions(z.provider, z.name,
+                                [900.0 + 60.0 * hash(z.name) % 7,
+                                 5000.0, 9000.0])
+        return m
+
+    @staticmethod
+    def _insts(n=64):
+        zones = ["us-east-1a", "us-east-2a", "us-west-2a"]
+        return [SimpleNamespace(provider="aws", zone=zones[i % 3])
+                for i in range(n)]
+
+    def _assert_draw_identical(self, model, now=100.0):
+        """Batch draws == sequential scalar draws from the same seed
+        (None <-> inf), bit-exact — the guarantee that a seeded run's
+        reclaim sequence does not depend on crossing
+        `CloudConfig.fleet_threshold`."""
+        insts = self._insts()
+        batch = model.next_preemption_delays(
+            insts, now, np.random.RandomState(42))
+        rng = np.random.RandomState(42)
+        seq = [model.next_preemption_delay(i, now, rng) for i in insts]
+        seq = np.array([np.inf if d is None else d for d in seq])
+        np.testing.assert_allclose(batch, seq, rtol=0, atol=0)
+
+    def test_price_coupled_batch_is_draw_identical(self):
+        self._assert_draw_identical(
+            PriceCoupledModel(self._market(), base_rate_per_hr=2.0,
+                              horizon_s=86400.0))
+
+    def test_replay_batch_is_draw_identical(self):
+        self._assert_draw_identical(ReplayInterruptionModel(self._market()))
+
+    def test_correlated_batch_is_draw_identical(self):
+        m = self._market()
+        self._assert_draw_identical(
+            CorrelatedReclaimModel(m, ConstantRateModel(rate_per_hr=4.0)))
+
+    def test_correlated_takes_min_of_base_and_schedule(self):
+        """A scheduled reclaim earlier than the base draw wins, and the
+        composition consumes exactly the base model's RNG stream."""
+        m = self._market()
+        model = CorrelatedReclaimModel(m, ConstantRateModel(0.0001))
+        insts = self._insts(8)
+        rng = np.random.RandomState(7)
+        out = model.next_preemption_delays(insts, 100.0, rng)
+        sched = ReplayInterruptionModel(m).next_preemption_delays(
+            insts, 100.0, np.random.RandomState(0))
+        assert np.all(out <= sched)
+
 
 class TestCohortSampling:
     POP = PopulationConfig(n_clients=5000, seed=11)
@@ -134,24 +192,71 @@ class TestCohortSampling:
 
 
 class TestRecordReplay:
-    def test_fleet_trace_replays_to_live_totals(self):
-        """A recorded fleet run replays through the replay-mode
-        accountant (folding `FleetStepSummary.cost_delta`) to the same
-        dollars; fleet traces carry no per-instance billing, so the
-        replayed per-client map is empty by design."""
+    def _record(self, **kw):
         cfg = FLRunConfig(dataset="s", clients=_uniform_clients(6),
                           n_epochs=4, policy="fedcostaware", seed=2,
-                          fleet=True)
+                          fleet=True, **kw)
         r = FLCloudRunner(cfg, DET_CLOUD, SCHED, record=True)
         live = r.run()
-        blob = r.recorder.dumps()
-        assert '"schema": 5' in blob.splitlines()[0]
+        return live, r.recorder.dumps()
+
+    def test_fleet_trace_replays_to_live_totals(self):
+        """A recorded fleet run replays through the replay-mode
+        accountant to the same dollars — total AND per client, off the
+        schema-v6 `client_cost_delta` attribution (the v5 bug: fleet
+        replays silently reported every per-client cost as zero)."""
+        live, blob = self._record()
+        assert '"schema": 6' in blob.splitlines()[0]
         rep = replay_result(EventReplayer.loads(blob))
         assert rep.total_cost == pytest.approx(live.total_cost, abs=1e-9)
         assert rep.rounds_completed == live.rounds_completed
+        assert rep.has_client_costs
+        for c, amt in live.per_client_cost.items():
+            if amt > 0.0:
+                assert rep.per_client_cost[c] == pytest.approx(amt,
+                                                               abs=1e-9)
+
+    def test_v5_fleet_trace_flags_missing_attribution(self):
+        """A v5-era fleet trace (summaries without `client_cost_delta`)
+        still replays to the right total, but the result now *says* the
+        per-client breakdown is absent instead of reporting zeros."""
+        import json
+        live, blob = self._record()
+        lines = blob.splitlines()
+        header = json.loads(lines[0])
+        header["schema"] = 5
+        out = [json.dumps(header)]
+        for ln in lines[1:]:
+            rec = json.loads(ln)
+            rec.pop("client_cost_delta", None)
+            out.append(json.dumps(rec))
+        rep = replay_result(EventReplayer.loads("\n".join(out) + "\n"))
+        assert rep.total_cost == pytest.approx(live.total_cost, abs=1e-9)
+        assert not rep.has_client_costs
         assert rep.per_client_cost == {}
 
+    def test_step_deltas_sum_to_client_totals(self):
+        """Per-step `client_cost_delta` maps sum (per client) to the
+        live run's final per-client dollars, and each step's map sums
+        to its `cost_delta`."""
+        import json
+        from collections import defaultdict
+        live, blob = self._record()
+        per_client = defaultdict(float)
+        for ln in blob.splitlines()[1:]:
+            rec = json.loads(ln)
+            if rec["type"] != "FleetStepSummary":
+                continue
+            step_map = rec.get("client_cost_delta", {})
+            assert sum(step_map.values()) == pytest.approx(
+                rec["cost_delta"], abs=1e-9)
+            for c, a in step_map.items():
+                per_client[c] += a
+        for c, amt in live.per_client_cost.items():
+            assert per_client.get(c, 0.0) == pytest.approx(amt, abs=1e-9)
 
+
+@pytest.mark.slow
 class TestScaling:
     """The core's reason to exist: wall-clock at cross-device scale."""
 

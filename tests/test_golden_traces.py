@@ -35,6 +35,7 @@ GOLDEN_V1_DIR = GOLDEN_DIR / "v1"
 GOLDEN_V2_DIR = GOLDEN_DIR / "v2"
 GOLDEN_V3_DIR = GOLDEN_DIR / "v3"
 GOLDEN_V4_DIR = GOLDEN_DIR / "v4"
+GOLDEN_V5_DIR = GOLDEN_DIR / "v5"
 FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
 
 CLOUD = CloudConfig(spot_rate_sigma=0.0)
@@ -414,13 +415,53 @@ class TestSchemaV4Compat:
         Table-I policies carry the exact pre-fleet event bodies — only
         the header's schema field moved."""
         h4, recs4 = load_golden(f"v4/{name}")
-        h5, recs5 = load_golden(name)
+        h5, recs5 = load_golden(f"v5/{name}")
         assert h4["schema"] == 4 and h5["schema"] == 5
         assert {k: v for k, v in h4.items() if k != "schema"} == \
             {k: v for k, v in h5.items() if k != "schema"}
         assert len(recs4) == len(recs5)
         for r4, r5 in zip(recs4, recs5):
             assert_json_equal(r5, r4)
+
+
+# ---------------------------------------------------------------------------
+# v5 -> v6 compat: the per-client fleet-attribution bump is purely
+# additive (one optional FleetStepSummary field, published only by the
+# fleet path), so archived schema-5 recordings must replay unchanged
+# and differ from the regenerated v6 goldens by the header alone.
+# ---------------------------------------------------------------------------
+class TestSchemaV5Compat:
+    V5_TRACES = TRACES + (FED_ISIC_TRACE,)
+
+    @pytest.mark.parametrize("name", V5_TRACES)
+    def test_v5_trace_loads(self, name):
+        rep = EventReplayer.load(GOLDEN_V5_DIR / f"{name}.events.jsonl")
+        assert rep.header["schema"] == 5
+
+    @pytest.mark.parametrize("trace", TRACES)
+    def test_v5_replay_matches_pinned_totals(self, trace):
+        rep = replay_result(GOLDEN_V5_DIR / f"{trace}.events.jsonl")
+        want = GOLDEN_TOTALS[trace]
+        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
+        for c, v in want["per_client"].items():
+            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
+        # per-object traces carry full BillingTick attribution, so even
+        # a v5 log's per-client breakdown is complete
+        assert rep.has_client_costs
+
+    @pytest.mark.parametrize("name", V5_TRACES)
+    def test_v5_and_v6_streams_are_equivalent(self, name):
+        """Per-object runs publish no fleet summaries, so the goldens
+        carry identical event bodies across the attribution bump — only
+        the header's schema field moved."""
+        h5, recs5 = load_golden(f"v5/{name}")
+        h6, recs6 = load_golden(name)
+        assert h5["schema"] == 5 and h6["schema"] == 6
+        assert {k: v for k, v in h5.items() if k != "schema"} == \
+            {k: v for k, v in h6.items() if k != "schema"}
+        assert len(recs5) == len(recs6)
+        for r5, r6 in zip(recs5, recs6):
+            assert_json_equal(r6, r5)
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,9 @@ import pytest
 
 from repro.checkpoint import snapshots
 from repro.checkpoint.store import MemoryStore
-from repro.cloud.preemption import (ConstantRateModel, PriceCoupledModel,
+from repro.cloud.preemption import (MODEL_NAMES, ConstantRateModel,
+                                    CorrelatedReclaimModel,
+                                    PriceCoupledModel,
                                     ReplayInterruptionModel,
                                     build_preemption_model)
 from repro.cloud.pricing import SpotMarket, TracePriceSource, Zone, Provider
@@ -163,6 +165,14 @@ class TestBuildModel:
         assert isinstance(build_preemption_model(
             CloudConfig(preemption_model="replay"), m),
             ReplayInterruptionModel)
+        assert isinstance(build_preemption_model(
+            CloudConfig(preemption_model="correlated"), m),
+            CorrelatedReclaimModel)
+
+    def test_registry_names_are_exhaustive(self):
+        m = flat_market()
+        for name in MODEL_NAMES:
+            build_preemption_model(CloudConfig(preemption_model=name), m)
 
     def test_unknown_name_raises(self):
         with pytest.raises(ValueError, match="unknown preemption model"):

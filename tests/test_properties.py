@@ -11,6 +11,9 @@ hypothesis = pytest.importorskip(
     "extra (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
+# property sweeps take tens of seconds in aggregate; full-suite only
+pytestmark = pytest.mark.slow
+
 from repro.common.config import CloudConfig, ClientProfile, FLRunConfig, \
     SchedulerConfig
 from repro.core.estimator import EMA

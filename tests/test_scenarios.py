@@ -1,0 +1,224 @@
+"""Adversarial scenario generators (repro.cloud.scenarios): seeded
+determinism down to recorded event-log bytes, cross-zone (not
+cross-provider) reclaim correlation under capacity_crunch, and
+flash-crash trace integrals agreeing with direct integration through
+the TracePriceSource prefix sums.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from repro.cloud.pricing import SpotMarket, TracePriceSource
+from repro.cloud.scenarios import (CRUNCH_JITTER_S, SCENARIOS,
+                                   apply_scenario)
+from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
+                                 MarketConfig, ProviderConfig,
+                                 ScenarioConfig)
+from repro.fl.runner import FLCloudRunner
+
+ALL_SCENARIOS = ("flash_crash", "capacity_crunch", "diurnal",
+                 "price_inversion")
+
+
+def two_provider_market(scenario=None, seed=3, provider=None,
+                        **sckw) -> MarketConfig:
+    return MarketConfig(
+        providers=(
+            ProviderConfig(name="aws", on_demand_rate=3.0, n_zones=3),
+            ProviderConfig(name="gcp", on_demand_rate=3.2, n_zones=2),
+        ),
+        scenario=(None if scenario is None
+                  else ScenarioConfig(name=scenario, seed=seed,
+                                      provider=provider, **sckw)))
+
+
+def build(scenario, seed=3, **sckw) -> SpotMarket:
+    return SpotMarket.from_market_config(
+        two_provider_market(scenario, seed=seed, **sckw), seed=7)
+
+
+class TestRegistry:
+    def test_all_generators_registered(self):
+        assert set(SCENARIOS) == set(ALL_SCENARIOS)
+
+    def test_unknown_scenario_raises(self):
+        m = build(None)
+        with pytest.raises(ValueError, match="unknown scenario"):
+            apply_scenario(m, ScenarioConfig(name="meteor_strike"))
+
+    def test_unknown_provider_raises(self):
+        with pytest.raises(ValueError, match="not in market"):
+            build("capacity_crunch", provider="azure")
+
+    def test_inversion_needs_two_providers(self):
+        single = MarketConfig(
+            providers=(ProviderConfig(name="aws", n_zones=2),),
+            scenario=ScenarioConfig(name="price_inversion"))
+        with pytest.raises(ValueError, match=">= 2 providers"):
+            SpotMarket.from_market_config(single, seed=7)
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("name", ALL_SCENARIOS)
+    def test_same_seed_same_traces(self, name):
+        """Byte-level: identical configs produce identical shaped
+        prices and identical reclaim schedules."""
+        m1, m2 = build(name), build(name)
+        ts = np.linspace(0.0, 48 * 3600.0, 777)
+        for z in m1.zones:
+            np.testing.assert_array_equal(
+                m1.source(z.name, z.provider).prices_at(ts),
+                m2.source(z.name, z.provider).prices_at(ts))
+        assert m1.interruptions == m2.interruptions
+
+    # price_inversion is seed-free by design (fixed 6 h blocks), so
+    # only the stochastic generators should move with the seed
+    @pytest.mark.parametrize(
+        "name", ("flash_crash", "capacity_crunch", "diurnal"))
+    def test_different_seed_different_traces(self, name):
+        m1, m2 = build(name, seed=3), build(name, seed=4)
+        ts = np.linspace(0.0, 48 * 3600.0, 777)
+        assert any(
+            not np.array_equal(
+                m1.source(z.name, z.provider).prices_at(ts),
+                m2.source(z.name, z.provider).prices_at(ts))
+            for z in m1.zones)
+
+    def test_same_seed_byte_identical_event_log(self):
+        """End to end: two recorded runs on the same scenario market
+        serialize to the same bytes — the sweep's reproducibility
+        contract."""
+        def record():
+            cloud = CloudConfig(
+                market=two_provider_market("capacity_crunch",
+                                           horizon_s=4 * 3600.0,
+                                           step_s=60.0),
+                preemption_model="correlated",
+                preemption_rate_per_hr=0.2)
+            clients = tuple(
+                ClientProfile(f"c{i}", mean_epoch_s=500.0 + 80.0 * i,
+                              jitter=0.05)
+                for i in range(4))
+            cfg = FLRunConfig(dataset="scn", clients=clients, n_epochs=4,
+                              policy="fedcostaware", seed=11)
+            r = FLCloudRunner(cfg, cloud_cfg=cloud, record=True)
+            r.run()
+            return r.recorder.dumps()
+
+        assert record() == record()
+
+
+class TestCapacityCrunch:
+    def test_reclaims_only_on_flagged_provider(self):
+        m = build("capacity_crunch", provider="gcp")
+        assert m.interruptions
+        assert {k[0] for k in m.interruptions} == {"gcp"}
+
+    def test_reclaims_cover_every_flagged_zone(self):
+        m = build("capacity_crunch")
+        flagged_zones = {z.name for z in m.zones if z.provider == "aws"}
+        assert {k[1] for k in m.interruptions} == flagged_zones
+
+    def test_reclaims_correlate_across_zones_not_providers(self):
+        """Each crunch hit reclaims every flagged zone within the
+        jitter window; zones of the *other* provider see nothing (the
+        correlation structure a per-zone Poisson process cannot
+        make)."""
+        m = build("capacity_crunch")
+        times = np.array([m.interruptions[k]
+                          for k in sorted(m.interruptions)])
+        assert times.shape[0] == 3          # aws zones
+        spread = times.max(axis=0) - times.min(axis=0)
+        assert spread.max() <= CRUNCH_JITTER_S
+        assert not any(k[0] == "gcp" for k in m.interruptions)
+
+    def test_prices_squeeze_during_windows(self):
+        """Flagged-provider prices rise relative to the unshaped base
+        somewhere on the horizon; the other provider's never move."""
+        base = build(None)
+        m = build("capacity_crunch")
+        ts = np.arange(0.0, 48 * 3600.0, 300.0)
+        for z in m.zones:
+            shaped = m.source(z.name, z.provider).prices_at(ts)
+            raw = base.source(z.name, z.provider).prices_at(ts)
+            if z.provider == "aws":
+                assert shaped.max() > raw.max() * 1.5
+            else:
+                np.testing.assert_allclose(shaped, raw, rtol=0, atol=0)
+
+
+class TestFlashCrash:
+    def test_spikes_decay_back_to_base(self):
+        base = build(None)
+        m = build("flash_crash")
+        ts = np.arange(0.0, 48 * 3600.0, 300.0)
+        for z in m.zones:
+            shaped = m.source(z.name, z.provider).prices_at(ts)
+            raw = base.source(z.name, z.provider).prices_at(ts)
+            assert shaped.max() > raw.max() * 1.8       # spikes exist
+            # decay: most of the horizon sits within 1% of base
+            close = np.abs(shaped / raw - 1.0) < 0.01
+            assert close.mean() > 0.5
+
+    def test_trace_integrals_match_direct_integration(self):
+        """The prefix-sum integral of every shaped trace agrees with
+        brute-force piecewise-constant integration to 1e-9 — the
+        billing hot path prices flash crashes exactly."""
+        m = build("flash_crash")
+        for z in m.zones:
+            src = m.source(z.name, z.provider)
+            assert isinstance(src, TracePriceSource)
+            t0, t1 = 1234.5, 30 * 3600.0 + 17.0
+            grid = np.union1d(src._times, [t0, t1])
+            grid = grid[(grid >= t0) & (grid <= t1)]
+            direct = sum(src.price(float(a)) * (b - a)
+                         for a, b in zip(grid[:-1], grid[1:]))
+            assert src.integral(t0, t1) == pytest.approx(direct,
+                                                         abs=1e-9)
+
+
+class TestDiurnalAndInversion:
+    def test_diurnal_cycles_daily(self):
+        """Shaped/base ratio at the same clock hour on consecutive
+        weekdays is equal; weekend days are scaled down."""
+        base = build(None)
+        # 7-day horizon so day 5 (weekend) sits inside the shaped trace
+        m = build("diurnal", horizon_s=7 * 86400.0)
+        z = m.zones[0]
+        src, raw = m.source(z.name, z.provider), base.source(z.name,
+                                                             z.provider)
+        day = 86400.0
+        t = 10 * 3600.0
+        r0 = src.price(t) / raw.price(t)
+        r1 = src.price(t + day) / raw.price(t + day)
+        assert r1 == pytest.approx(r0, rel=1e-9)
+        rw = src.price(t + 5 * day) / raw.price(t + 5 * day)
+        assert rw == pytest.approx(0.8 * r0, rel=1e-9)
+
+    def test_inversion_flips_cheapest_provider(self):
+        """In even blocks the flagged provider is expensive, in odd
+        blocks cheap — `cheapest_zone` arbitration flips providers."""
+        m = build("price_inversion", strength=1.0)
+        even_prov = m.cheapest_zone(3 * 3600.0)[0].provider
+        odd_prov = m.cheapest_zone(9 * 3600.0)[0].provider
+        assert even_prov != odd_prov
+
+
+class TestScenarioThroughBenchmarks:
+    def test_any_policy_runs_on_scenario_market(self):
+        """A scenario-bearing MarketConfig is reachable from plain
+        config — every existing benchmark can opt in."""
+        cloud = CloudConfig(market=two_provider_market("diurnal"))
+        cfg = FLRunConfig(
+            dataset="scn",
+            clients=(ClientProfile("a", mean_epoch_s=400.0, jitter=0.0),
+                     ClientProfile("b", mean_epoch_s=700.0, jitter=0.0)),
+            n_epochs=3, policy="spot", seed=0)
+        res = FLCloudRunner(cfg, cloud_cfg=cloud).run()
+        assert res.total_cost > 0.0
+        assert res.rounds_completed == 3
