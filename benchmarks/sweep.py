@@ -15,6 +15,9 @@ Flags (documented in benchmarks/README.md):
   --markets M [M ...]   named sweep markets (default: all five)
   --models M [M ...]    preemption models crossed with every market
                         (default: each market's registered default)
+  --engines E [E ...]   round-engine overrides crossed into the grid
+                        (sync / async_buffered; default: each policy's
+                        own engine)
   --seeds N             Monte-Carlo repetitions per cell
   --clients N           cross-silo pool size per run
   --epochs N            FL rounds per run
@@ -77,6 +80,10 @@ def main(argv: Optional[Sequence[str]] = None):
                     choices=list(MODEL_NAMES),
                     help="preemption models crossed with every market "
                          "(default: per-market registered default)")
+    ap.add_argument("--engines", nargs="+", default=None,
+                    choices=["sync", "async_buffered"],
+                    help="round-engine overrides crossed into the grid "
+                         "(default: each policy's own engine)")
     ap.add_argument("--seeds", type=int, default=5,
                     help="Monte-Carlo repetitions per cell")
     ap.add_argument("--clients", type=int, default=8,
@@ -98,10 +105,13 @@ def main(argv: Optional[Sequence[str]] = None):
 
     specs = build_grid(args.policies, args.markets,
                        seeds=range(args.seeds), models=args.models,
-                       n_clients=args.clients, n_epochs=args.epochs)
+                       n_clients=args.clients, n_epochs=args.epochs,
+                       engines=args.engines)
+    engines_part = (f" x {len(args.engines)} engines"
+                    if args.engines else "")
     print(f"# sweep: {len(specs)} cells "
-          f"({len(args.policies)} policies x {len(args.markets)} markets "
-          f"x {args.seeds} seeds)")
+          f"({len(args.policies)} policies x {len(args.markets)} markets"
+          f"{engines_part} x {args.seeds} seeds)")
     results = run_sweep(specs, parallel=not args.serial,
                         processes=args.processes)
     report = build_report(specs, results)

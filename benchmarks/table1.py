@@ -18,8 +18,17 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import sys
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple, Union
+
+# --real-training runs real jitted LM steps with one host device per
+# client (the CPU host-device trick); the device count must be forced
+# before jax is first imported, so it happens at module import, gated
+# on the flag actually being present.
+if "--real-training" in sys.argv and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 from repro.common.config import (CloudConfig, ClientProfile, FLRunConfig,
                                  MarketConfig, ProviderConfig,
@@ -130,6 +139,10 @@ def run(record_dir: Optional[Union[str, Path]] = None,
                 # market sets StorageRates and a notice window lets
                 # `on_warning=checkpoint|drain` snapshots land)
                 "checkpoint_cost": round(res.checkpoint_cost, 6),
+                # egress dollars of client update uploads (zero unless
+                # the market prices `TransferRates` and the run models
+                # a payload — see repro.comms)
+                "comm_cost": round(res.comm_cost, 6),
                 "paper_cost": target,
                 "rel_err": (round(abs(res.total_cost - target) / target, 4)
                             if target is not None else None),
@@ -150,6 +163,117 @@ def run(record_dir: Optional[Union[str, Path]] = None,
     return out
 
 
+# ---------------------------------------------------------------------------
+# --real-training: the tentpole bridge. Real sharded jax_pallas client
+# steps stand in for the simulated epoch durations; the comms subsystem
+# prices every update upload off the *actual* param pytree.
+# ---------------------------------------------------------------------------
+
+# simulated-seconds per measured step-second: a smoke-model CPU round
+# (~tens of ms) anchors cloud-scale epochs (~tens of s) without losing
+# the measured heterogeneity (the paper's scaled-duration knob)
+_TIME_SCALE = 1000.0
+
+# AWS-style egress ($0.09/GB) and a 100 Mbps client uplink: the rates
+# that make `comm_cost` and upload makespan non-zero for real runs
+_EGRESS_USD_PER_MB = 0.09 / 1024
+_UPLINK_MBPS = 100.0
+
+
+def comm_market(row: Table1Row) -> MarketConfig:
+    """The row's synthetic single-provider market with transfer pricing
+    and a client uplink attached (the paper market priced compute
+    only)."""
+    return MarketConfig(providers=(
+        ProviderConfig(name="aws", on_demand_rate=row.od_rate,
+                       spot_rate_mean=row.spot_rate / 0.98,
+                       spot_rate_sigma=0.0, n_zones=3,
+                       update_egress_usd_per_mb=_EGRESS_USD_PER_MB,
+                       uplink_mbps=_UPLINK_MBPS),))
+
+
+def run_real(row: Table1Row, policy: str = "fedcostaware",
+             rounds: int = 2, n_clients: int = 2,
+             quantize: bool = False, seed: int = 0,
+             record_to: Optional[Union[str, Path]] = None):
+    """One Table-1 row with *real* training: every simulated epoch maps
+    to `local_steps` jitted sharded LM steps on the client's own host
+    device, epoch durations are calibrated from the measured step time,
+    and update uploads are sized from the live param pytree (int8
+    quantized when `quantize`). Returns (RunResult, hooks, calibration).
+    """
+    from repro.fl import training as T
+    names = tuple(f"client_{i}" for i in range(n_clients))
+    hooks = T.MeshTrainerHooks(names, local_steps=2, batch=4, seq=16,
+                               quantize=quantize, seed=seed)
+    cal = T.calibrate(hooks)
+    profiles = tuple(
+        ClientProfile(name, mean_epoch_s=row.epoch_s[i % len(row.epoch_s)],
+                      cold_multiplier=1.12, jitter=0.0)
+        for i, name in enumerate(names))
+    profiles = tuple(T.calibrated_profiles(profiles, cal,
+                                           time_scale=_TIME_SCALE))
+    cloud = CloudConfig(spin_up_mean_s=row.spin_up_s, spin_up_sigma=0.0,
+                        market=comm_market(row))
+    cfg = FLRunConfig(dataset=row.dataset, clients=profiles,
+                      n_epochs=rounds, policy=policy, seed=seed,
+                      quantize_updates=quantize)
+    res = FLCloudRunner(cfg, cloud_cfg=cloud, hooks=hooks,
+                        record_to=record_to).run()
+    return res, hooks, cal
+
+
+def assert_comm_win(fp32_rec: dict, quant_rec: dict,
+                    loss_delta_bound: float = 0.75) -> None:
+    """The real-training gate: quantization must strictly cut egress
+    dollars (both runs must bill a nonzero `comm_cost`) without moving
+    the final training loss by more than `loss_delta_bound`."""
+    c_fp, c_q = fp32_rec["comm_cost"], quant_rec["comm_cost"]
+    if not (c_fp > 0.0 and c_q > 0.0):
+        raise SystemExit(f"--assert-comm-win needs nonzero comm_cost "
+                         f"on both runs (fp32 {c_fp}, quantized {c_q})")
+    if not c_q < c_fp:
+        raise SystemExit(f"quantized egress {c_q} not below fp32 {c_fp}")
+    dl = abs(quant_rec["final_loss"] - fp32_rec["final_loss"])
+    if not dl <= loss_delta_bound:
+        raise SystemExit(
+            f"quantized final loss {quant_rec['final_loss']:.4f} drifts "
+            f"{dl:.4f} from fp32 {fp32_rec['final_loss']:.4f} "
+            f"(bound {loss_delta_bound})")
+    print(f"# comm win: quantized ${c_q:.6f} < fp32 ${c_fp:.6f} "
+          f"({100 * (1 - c_q / c_fp):.1f}% less egress, "
+          f"final-loss delta {dl:.4f} <= {loss_delta_bound})")
+
+
+def run_real_rows(row: Table1Row, rounds: int, n_clients: int,
+                  quantize: bool, both: bool,
+                  policy: str = "fedcostaware", seed: int = 0) -> List[dict]:
+    """The real-training record list: one row per (quantization) arm —
+    the requested arm only, or fp32 + quantized when `both` (the
+    --assert-comm-win pairing)."""
+    arms = [False, True] if both else [quantize]
+    out = []
+    for q in arms:
+        res, hooks, cal = run_real(row, policy=policy, rounds=rounds,
+                                   n_clients=n_clients, quantize=q,
+                                   seed=seed)
+        out.append({
+            "dataset": row.dataset, "n_clients": n_clients,
+            "n_epochs": rounds,
+            "algorithm": f"{policy}[{'int8' if q else 'fp32'}]",
+            "total_cost": round(res.total_cost, 6),
+            "checkpoint_cost": round(res.checkpoint_cost, 6),
+            "comm_cost": round(res.comm_cost, 6),
+            "paper_cost": None, "rel_err": None,
+            "makespan_h": round(res.makespan_s / 3600, 6),
+            "final_loss": round(hooks.final_loss(), 4),
+            "calibrated_epoch_s": round(
+                cal.mean_epoch_s(_TIME_SCALE), 3),
+            "roofline_ratio": round(cal.ratio, 3),
+        })
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--record-dir", metavar="DIR", default=None,
@@ -165,18 +289,56 @@ def main(argv=None):
     ap.add_argument("--providers", metavar="NAMES", default="aws",
                     help="comma-separated provider list for "
                          "--price-trace (default: aws)")
+    ap.add_argument("--real-training", action="store_true",
+                    help="replace simulated epochs with real sharded "
+                         "jax_pallas LM steps (one host device per "
+                         "client) and bill update egress off the live "
+                         "param pytree")
+    ap.add_argument("--quantize-updates", action="store_true",
+                    help="with --real-training: int8-quantize client "
+                         "updates (grad_quant codec) end to end — "
+                         "smaller payloads, cheaper egress")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="with --real-training: FL rounds (default 2)")
+    ap.add_argument("--clients", type=int, default=2,
+                    help="with --real-training: client count, one host "
+                         "device each (default 2)")
+    ap.add_argument("--assert-comm-win", action="store_true",
+                    help="with --real-training: run fp32 AND quantized "
+                         "arms; fail unless quantized egress dollars "
+                         "are strictly lower at a bounded final-loss "
+                         "delta")
     args = ap.parse_args(argv)
-    print("dataset,algorithm,total_cost,checkpoint_cost,paper_cost,"
-          "rel_err,savings_vs_od_pct,paper_savings_pct")
+
     def fmt(v):
         return "" if v is None else v
 
+    if args.real_training:
+        row = next(r for r in ROWS
+                   if r.dataset == (args.row or "MNIST"))
+        recs = run_real_rows(row, rounds=args.rounds,
+                             n_clients=args.clients,
+                             quantize=args.quantize_updates,
+                             both=args.assert_comm_win)
+        print("dataset,algorithm,total_cost,checkpoint_cost,comm_cost,"
+              "final_loss,calibrated_epoch_s,roofline_ratio,makespan_h")
+        for r in recs:
+            print(f"{r['dataset']},{r['algorithm']},{r['total_cost']},"
+                  f"{r['checkpoint_cost']},{r['comm_cost']},"
+                  f"{r['final_loss']},{r['calibrated_epoch_s']},"
+                  f"{r['roofline_ratio']},{r['makespan_h']}")
+        if args.assert_comm_win:
+            assert_comm_win(recs[0], recs[1])
+        return
+
+    print("dataset,algorithm,total_cost,checkpoint_cost,comm_cost,"
+          "paper_cost,rel_err,savings_vs_od_pct,paper_savings_pct")
     providers = tuple(p.strip() for p in args.providers.split(",")
                       if p.strip())
     for r in run(record_dir=args.record_dir, only_dataset=args.row,
                  price_trace=args.price_trace, providers=providers):
         print(f"{r['dataset']},{r['algorithm']},{r['total_cost']},"
-              f"{r['checkpoint_cost']},"
+              f"{r['checkpoint_cost']},{r['comm_cost']},"
               f"{fmt(r['paper_cost'])},{fmt(r['rel_err'])},"
               f"{fmt(r.get('savings_vs_od_pct'))},"
               f"{fmt(r.get('paper_savings_pct'))}")

@@ -29,9 +29,10 @@ from typing import Callable, Dict, Optional, Sequence, Set
 import numpy as np
 
 from repro.core.events import (BillingTick, CheckpointBilled,
-                               ClientCheckpointed, EventBus, FleetStepSummary,
+                               ClientCheckpointed, ClientUpdateSent,
+                               EventBus, FleetStepSummary,
                                InstancePreempted, InstanceReady,
-                               InstanceTerminated)
+                               InstanceTerminated, TransferBilled)
 from repro.cloud.pricing import SpotMarket
 
 
@@ -59,6 +60,8 @@ class CostAccountant:
         self._closed_total = 0.0
         self._ckpt: Dict[str, float] = defaultdict(float)
         self._ckpt_total = 0.0
+        self._xfer: Dict[str, float] = defaultdict(float)
+        self._xfer_total = 0.0
         self._open: Dict[int, object] = {}          # iid -> Instance
         self._open_by_client: Dict[str, Set[int]] = defaultdict(set)
         # fleet-step dollars folded into the total without per-client
@@ -72,6 +75,8 @@ class CostAccountant:
         bus.subscribe(InstancePreempted, self._on_closed)
         bus.subscribe(ClientCheckpointed, self._on_checkpointed)
         bus.subscribe(CheckpointBilled, self._on_checkpoint_billed)
+        bus.subscribe(ClientUpdateSent, self._on_update_sent)
+        bus.subscribe(TransferBilled, self._on_transfer_billed)
         bus.subscribe(FleetStepSummary, self._on_fleet_step)
 
     # ------------------------------------------------------------------
@@ -114,6 +119,25 @@ class CostAccountant:
         and replay alike)."""
         self._ckpt[ev.client] += ev.amount
         self._ckpt_total += ev.amount
+
+    def _on_update_sent(self, ev: ClientUpdateSent):
+        """Live mode: price one client-update upload's egress against
+        the sending provider's `TransferRates` and publish the
+        (non-zero) charge as `TransferBilled` — the same live/replay
+        split as checkpoint billing. Replay mode skips this; the
+        recorded `TransferBilled` carries the charge."""
+        if self._prices is None:
+            return
+        rates = self._prices.provider_of(ev.provider or None).transfer
+        amount = rates.transfer_cost(ev.size_mb)
+        if amount > 0.0:
+            self._bus.publish(TransferBilled(ev.t, ev.client, amount))
+
+    def _on_transfer_billed(self, ev: TransferBilled):
+        """Fold one upload's egress dollars into the totals (live and
+        replay alike)."""
+        self._xfer[ev.client] += ev.amount
+        self._xfer_total += ev.amount
 
     def _on_fleet_step(self, ev: FleetStepSummary):
         """Replay mode only: fold one fleet step's *settled* dollars
@@ -170,15 +194,16 @@ class CostAccountant:
                                  provider=getattr(inst, "provider", None))
 
     def client_cost(self, client: str) -> float:
-        """Dollars accrued by `client` so far: open segments and
-        checkpoint storage included."""
+        """Dollars accrued by `client` so far: open segments,
+        checkpoint storage and update egress included."""
         return (self._closed[client] + self._ckpt[client]
+                + self._xfer[client]
                 + sum(self._open_cost(self._open[i])
                       for i in self._open_by_client[client]))
 
     def total_cost(self) -> float:
         """Dollars accrued by the whole run so far."""
-        return (self._closed_total + self._ckpt_total
+        return (self._closed_total + self._ckpt_total + self._xfer_total
                 + sum(self._open_cost(i) for i in self._open.values()))
 
     def checkpoint_cost(self, client: str) -> float:
@@ -191,9 +216,20 @@ class CostAccountant:
         subset of `total_cost`)."""
         return self._ckpt_total
 
+    def transfer_cost(self, client: str) -> float:
+        """Egress dollars `client`'s update uploads have accrued (a
+        subset of `client_cost`)."""
+        return self._xfer[client]
+
+    def transfer_cost_total(self) -> float:
+        """Egress dollars all update uploads have accrued (a subset
+        of `total_cost`)."""
+        return self._xfer_total
+
     def per_client(self) -> Dict[str, float]:
         """`client_cost` for every client ever billed or running."""
-        clients = set(self._closed) | set(self._open_by_client)
+        clients = (set(self._closed) | set(self._open_by_client)
+                   | set(self._xfer))
         return {c: self.client_cost(c) for c in clients}
 
     def has_client_costs(self, tiny: float = 1e-12) -> bool:

@@ -36,6 +36,7 @@ from typing import (Dict, Iterable, List, Optional, Protocol, Sequence,
 
 import numpy as np
 
+from repro.comms.billing import TransferRates
 from repro.common.config import CloudConfig, MarketConfig, ProviderConfig
 
 DEFAULT_PROVIDER = "aws"
@@ -71,6 +72,13 @@ class Provider:
     preemption_price_sensitivity: float = 1.0
     # object-storage rates billed per warning-window checkpoint write
     storage: StorageRates = StorageRates()
+    # client-update egress rates (repro.comms.billing); zero default
+    # keeps transfer billing opt-in and pre-comms totals unchanged
+    transfer: TransferRates = TransferRates()
+    # uplink bandwidth for client-update uploads (Mbit/s); <= 0 means
+    # unmodeled (instantaneous). Zone pairs override the base rate.
+    uplink_mbps: float = 0.0
+    zone_uplink_mbps: Tuple[Tuple[str, float], ...] = ()
 
     @classmethod
     def from_cloud_config(cls, cfg: CloudConfig,
@@ -95,7 +103,10 @@ class Provider:
                        pc.preemption_price_sensitivity),
                    storage=StorageRates(
                        pc.storage_put_usd,
-                       pc.storage_egress_usd_per_mb))
+                       pc.storage_egress_usd_per_mb),
+                   transfer=TransferRates(pc.update_egress_usd_per_mb),
+                   uplink_mbps=pc.uplink_mbps,
+                   zone_uplink_mbps=tuple(pc.zone_uplink_mbps))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -253,6 +253,21 @@ class ProviderConfig:
     # checkpoint writes stay free unless a market opts in.
     storage_put_usd: float = 0.0
     storage_egress_usd_per_mb: float = 0.0
+    # client-update egress rate (`repro.cloud.pricing.TransferRates`,
+    # the comms subsystem): dollars per MB a client's model update
+    # costs to leave this provider on its way to the aggregation
+    # server. Zero by default — per-round transfer dollars only appear
+    # when a market opts in, keeping every pre-comms total unchanged.
+    update_egress_usd_per_mb: float = 0.0
+    # uplink bandwidth (megabits/s) of this provider's instances toward
+    # the aggregation server; client-update transfers occupy the client
+    # for payload_bits / uplink for this long, extending the round
+    # makespan inside both engines. <= 0 models an instantaneous
+    # uplink (no makespan extension — the pre-comms behavior).
+    uplink_mbps: float = 0.0
+    # per-zone uplink overrides as ("zone-name", mbps) pairs; zones
+    # absent here fall back to `uplink_mbps`
+    zone_uplink_mbps: Tuple[Tuple[str, float], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -396,6 +411,12 @@ class FLRunConfig:
     # overrides whether cheapest-zone placement may arbitrate across
     # every provider in the market or stays on the default provider
     cross_provider: Optional[bool] = None
+    # None -> the policy's own round engine ("sync" unless the policy
+    # says otherwise, e.g. fedcostaware_async); "sync" |
+    # "async_buffered" overrides it. Resolved before the fleet-path
+    # decision, so forcing async on a fleet-capable policy falls back
+    # to the per-object engines.
+    engine: Optional[str] = None
     # None -> the policy's own on_warning default; "ignore" | "drain" |
     # "checkpoint" overrides how the run reacts to a provider's
     # preemption-notice warning (see `repro.core.strategy`). The
@@ -420,6 +441,20 @@ class FLRunConfig:
     # True forces the vectorized core even for tiny runs (equivalence
     # tests); False forces the per-object path at any scale
     fleet: Optional[bool] = None
+    # communication-cost modeling (`repro.comms`): the per-update
+    # payload each client uploads after local training, in MB of fp32
+    # state. None disables the comms subsystem entirely (no
+    # ClientUpdateSent events, no transfer billing, no makespan
+    # extension — byte-identical to pre-comms streams). When trainer
+    # hooks expose a real param pytree (`TrainerHooks.update_payload`),
+    # that measured payload wins over this modeled value.
+    update_payload_mb: Optional[float] = None
+    # quantize client updates through the `grad_quant` int8 codec:
+    # payload bytes follow the kernel's exact (block + scale) layout
+    # (~4x smaller egress), and hooks that train for real
+    # (`repro.fl.training.MeshTrainerHooks`) round-trip every update
+    # through quantize/dequantize before aggregation
+    quantize_updates: bool = False
     seed: int = 0
 
     def __post_init__(self):

@@ -63,8 +63,17 @@ from repro.core.events import EVENT_TYPES, Event, EventBus
 #        unchanged; a v5 summary decodes with an empty map, which
 #        replay accounting surfaces as "per-client attribution absent"
 #        (`RunResult.has_client_costs=False`) instead of zeros.
-SCHEMA_VERSION = 6
-SUPPORTED_SCHEMAS = (1, 2, 3, 4, 5, 6)
+#   v7 — communication-cost vocabulary (the `repro.comms` subsystem):
+#        ClientUpdateSent (one per client-update upload: payload MB,
+#        quantized flag, provider/zone, transfer seconds) and
+#        TransferBilled (egress dollars the live accountant priced for
+#        that upload, mirroring CheckpointBilled). Purely additive —
+#        v1–v6 logs (golden copies under tests/golden/v1..v6) replay
+#        unchanged, and runs without comms modeling (the default:
+#        `FLRunConfig.update_payload_mb=None`, zero egress rates)
+#        record streams identical to v6 apart from the header.
+SCHEMA_VERSION = 7
+SUPPORTED_SCHEMAS = (1, 2, 3, 4, 5, 6, 7)
 
 _SCALARS = (bool, int, float, str)
 

@@ -238,6 +238,40 @@ class CheckpointBilled(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class ClientUpdateSent(Event):
+    """A client finished local training and uploaded its model update
+    to the aggregation server (schema v7, the comms subsystem
+    `repro.comms`). `size_mb` is the payload actually sent — the fp32
+    pytree bytes, or the grad_quant int8 (blocks + scales) layout when
+    `quantized` — and `transfer_s` how long the upload occupied the
+    client's uplink (0 on an unmodeled/instantaneous channel).
+    `provider`/`zone` locate the instance the update left from, which
+    is what `TransferRates` egress pricing keys on. Only published
+    when a run enables comms modeling (`FLRunConfig.update_payload_mb`
+    or payload-exposing trainer hooks) — default event streams carry
+    none, keeping golden traces unmoved."""
+    client: str
+    round_idx: int
+    size_mb: float
+    quantized: bool = False
+    provider: str = ""
+    zone: str = ""
+    transfer_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferBilled(Event):
+    """Egress dollars charged for one client-update upload (the
+    provider's `TransferRates`; schema v7). Published by the live
+    `CostAccountant` in response to `ClientUpdateSent`, mirroring
+    `CheckpointBilled`, so replay consumers rebuild the same transfer
+    spend without a price book. Only published when the charge is
+    non-zero."""
+    client: str
+    amount: float
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetStepSummary(Event):
     """Aggregate fleet telemetry for one simulation step (one FL round
     of the vectorized fleet core, schema v6).
@@ -301,7 +335,8 @@ EVENT_TYPES: Dict[str, Type[Event]] = {
         ClientPreemptionWarning, ClientLost, ClientCheckpointed,
         ClientResumedFromCheckpoint, RoundStarted, RoundCompleted,
         ClientStateChanged, BudgetExhausted, ClientScreenedOut,
-        DirectiveIssued, CheckpointBilled, FleetStepSummary, RunCompleted,
+        DirectiveIssued, CheckpointBilled, ClientUpdateSent,
+        TransferBilled, FleetStepSummary, RunCompleted,
     )
 }
 

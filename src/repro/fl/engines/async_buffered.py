@@ -128,16 +128,49 @@ class AsyncBufferedEngine(BaseEngine):
             self.strategies.note_observation(c, spin_up_s=spin_obs)
         if self.hooks:
             self.hooks.run_local(c, self._round_idx)
+        dr = self._dispatch_round.get(c, self._round_idx)
+        if self.comms is not None:
+            self._begin_upload(c, dr)
+            return
+        self._complete_result(c, dr)
+
+    def _begin_upload(self, c: str, dr: int):
+        """Comms modeling: the finished update occupies the client's
+        uplink before it can enter the buffer (and before the client is
+        re-dispatched). `dr` pins the update's dispatch round now — a
+        reclaim mid-upload may start the client's *next* epoch before
+        the upload lands, clobbering `_dispatch_round`."""
+        xfer = self._publish_update_sent(c, self._round_idx)
+        if xfer <= 0.0:
+            self._complete_result(c, dr)
+            return
+        self._uploading.add(c)
+        self._mark(c, "uploading")
+        self.sim.schedule_in(xfer, lambda: self._finish_upload(c, dr))
+
+    def _finish_upload(self, c: str, dr: int):
+        self._uploading.discard(c)
+        if self._done or c not in self._active:
+            return                                  # excluded mid-upload
+        self._complete_result(c, dr)
+
+    def _complete_result(self, c: str, dr: int):
+        """`c`'s round-`dr` update reaches the server: buffer it,
+        aggregate when the buffer fills, put the client back to work."""
         self._buffer.append(c)
-        self._buffer_round[c] = self._dispatch_round.get(
-            c, self._round_idx)
-        self._mark(c, "idle")
+        self._buffer_round[c] = dr
+        if c not in self._task:
+            self._mark(c, "idle")
         # exclusions may shrink the pool below buffer_k; clamp so the
         # run can still make progress (else it would spin forever)
         k_eff = min(self.buffer_k, max(1, len(self._active)))
         if len(self._buffer) >= k_eff:
             self._aggregate()
-        if not self._done and c in self._active:
+        # a reclaim mid-upload may already have re-requested (or even
+        # restarted) the client; only dispatch when nothing is in flight
+        if (not self._done and c in self._active
+                and self._task.get(c) is None
+                and c not in self._pending_dispatch):
             self._dispatch(c)       # straight back to work, no barrier
 
     # ------------------------------------------------------------------
@@ -213,6 +246,8 @@ class AsyncBufferedEngine(BaseEngine):
         if self._done or c not in self._active:
             return
         if self._task.pop(c, None) is None:
+            # idle or mid-upload (the committed update still lands on
+            # schedule — only instance-seconds were lost, no redo)
             self._mark(c, "savings")
             self._pending_dispatch.add(c)       # re-request on next need
             self.cluster.request(c)

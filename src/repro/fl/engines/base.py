@@ -31,9 +31,8 @@ built-in engines already keep.
 from __future__ import annotations
 
 import dataclasses
-import inspect
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -50,7 +49,10 @@ from repro.core.policies import Policy
 from repro.core.strategy import StrategyStack
 from repro.fl.cluster import ClusterManager
 from repro.fl.telemetry import TimelineRecorder
-from repro.fl.types import RunResult, TrainerHooks
+from repro.comms.channel import CommsModel
+from repro.core.events import ClientUpdateSent
+from repro.fl.types import (RunResult, TrainerHooks,
+                            aggregate_accepts_staleness)
 
 
 @dataclasses.dataclass
@@ -68,6 +70,9 @@ class EngineContext:
     rng: np.random.RandomState
     hooks: Optional[TrainerHooks] = None
     ckpt_store: Optional[ObjectStore] = None   # None -> private MemoryStore
+    # None -> no comms modeling: uploads are instantaneous and free,
+    # no ClientUpdateSent events — the pre-v7 default path, bit-exact
+    comms: Optional[CommsModel] = None
 
 
 class BaseEngine:
@@ -87,6 +92,15 @@ class BaseEngine:
         self.accountant = ctx.accountant
         self.timeline = ctx.timeline
         self.hooks = ctx.hooks
+        self.comms = ctx.comms
+        # sniffed once here, not per round (fl.types helper warns on
+        # the deprecated 2-argument aggregate override)
+        self._aggregate_accepts_staleness = aggregate_accepts_staleness(
+            ctx.hooks)
+        # clients whose finished update is still occupying the uplink
+        # (comms modeling only); they are not "training" for the
+        # warning path, and losing their instance costs no redo
+        self._uploading: Set[str] = set()
         self._rng = ctx.rng
         self.ckpt_store = ctx.ckpt_store or MemoryStore()
         self.profiles: Dict[str, ClientProfile] = {
@@ -214,18 +228,26 @@ class BaseEngine:
         hooks that accept it (legacy 2-argument overrides still work)."""
         if self.hooks is None:
             return
-        try:
-            params = inspect.signature(self.hooks.aggregate).parameters
-        except (TypeError, ValueError):  # builtins / C callables
-            params = {}
-        accepts = ("staleness" in params
-                   or any(p.kind is inspect.Parameter.VAR_KEYWORD
-                          for p in params.values()))
-        if accepts:
+        if self._aggregate_accepts_staleness:
             self.hooks.aggregate(participants, round_idx,
                                  staleness=staleness)
         else:
             self.hooks.aggregate(participants, round_idx)
+
+    def _publish_update_sent(self, c: str, round_idx: int) -> float:
+        """Comms modeling: publish `ClientUpdateSent` for `c`'s finished
+        round-`round_idx` update and return the modeled uplink seconds
+        the upload occupies (0.0 when bandwidth is unmodeled). Only
+        called when `self.comms` is attached, so default runs publish
+        nothing."""
+        inst = self.cluster.instance_of(c)
+        provider = getattr(inst, "provider", "") or ""
+        zone = getattr(inst, "zone", "") or ""
+        xfer = self.comms.transfer_s(provider, zone)
+        self.sim.bus.publish(ClientUpdateSent(
+            self.sim.now, c, round_idx, self.comms.size_mb,
+            self.comms.quantized, provider, zone, xfer))
+        return xfer
 
     def _screen_round(self, round_idx: int,
                       candidates: List[str]) -> List[str]:
@@ -282,4 +304,5 @@ class BaseEngine:
             per_round_participants=self.per_round_participants,
             lost_work_s=self.lost_work_s,
             n_preemptions=self.n_preemptions,
-            checkpoint_cost=self.accountant.checkpoint_cost_total())
+            checkpoint_cost=self.accountant.checkpoint_cost_total(),
+            comm_cost=self.accountant.transfer_cost_total())

@@ -96,9 +96,11 @@ class SyncEngine(BaseEngine):
     def _is_training(self, c: str) -> bool:
         """Mid-epoch iff the round still owes `c` a result and its
         tracked instance is RUNNING (a resuming client's replacement is
-        still SPINNING_UP, an aggregated client left `_round_pending`)."""
+        still SPINNING_UP, an aggregated client left `_round_pending`,
+        an uploading client's epoch compute is already done)."""
         inst = self.cluster.instance_of(c)
         return (c in self._round_pending and c in self._train_start
+                and c not in self._uploading
                 and inst is not None and inst.state == RUNNING)
 
     # ------------------------------------------------------------------
@@ -136,12 +138,40 @@ class SyncEngine(BaseEngine):
             self.strategies.note_result(c, t, dur, cold, spin_obs)
         if self.hooks:
             self.hooks.run_local(c, r)
+        if self.comms is not None:
+            self._begin_upload(c, r)
+            return
+        self._complete_result(c, r)
+
+    def _begin_upload(self, c: str, r: int):
+        """Comms modeling: the finished update occupies the client's
+        uplink before the barrier can count it. The update itself is
+        already committed (`run_local` buffered it), so a reclaim
+        mid-upload loses no work — only the modeled transfer time
+        stretches the round."""
+        xfer = self._publish_update_sent(c, r)
+        if xfer <= 0.0:
+            self._complete_result(c, r)
+            return
+        self._uploading.add(c)
+        self._mark(c, "uploading")
+        self.sim.schedule_in(xfer, lambda: self._finish_upload(c, r))
+
+    def _finish_upload(self, c: str, r: int):
+        self._uploading.discard(c)
+        if r != self._round_idx or c not in self._round_pending:
+            return                                  # stale (run moved on)
+        self._complete_result(c, r)
+
+    def _complete_result(self, c: str, r: int):
+        """The barrier receives `c`'s round-`r` update: release the
+        client and end the round when it was the last one owed."""
         self._round_pending.discard(c)
         self._mark(c, "idle")
 
         if self._round_pending:
             more = (r + 1) < self.run_cfg.n_epochs
-            self.strategies.client_result(c, t, more)
+            self.strategies.client_result(c, self.sim.now, more)
 
         if not self._round_pending:
             self._end_round(r)
@@ -151,9 +181,12 @@ class SyncEngine(BaseEngine):
     # ------------------------------------------------------------------
     def _on_client_lost(self, ev: ClientLost):
         c = ev.client
-        was_training = c in self._round_pending and c in self._train_start
+        was_training = (c in self._round_pending and c in self._train_start
+                        and c not in self._uploading)
         if not was_training:
-            # idle / pre-warmed instance lost: next dispatch re-requests
+            # idle / pre-warmed / mid-upload instance lost: an uploading
+            # client's update is already committed (no redo) — the
+            # upload completes on schedule; next dispatch re-requests
             self._mark(c, "savings")
             return
         # Progress up to the best surviving checkpoint survives: the

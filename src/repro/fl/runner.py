@@ -50,6 +50,8 @@ import numpy as np
 from repro.checkpoint.store import MemoryStore, ObjectStore
 from repro.cloud.accounting import CostAccountant
 from repro.cloud.pricing import SpotMarket
+from repro.comms.channel import CommsModel, UplinkChannel
+from repro.comms.payload import UpdatePayload
 from repro.cloud.simulator import CloudSimulator
 from repro.common.config import CloudConfig, FLRunConfig, SchedulerConfig
 from repro.core.events import EventBus, RunCompleted
@@ -88,6 +90,9 @@ class FLCloudRunner:
         if run_cfg.on_warning is not None:
             self.policy = dataclasses.replace(
                 self.policy, on_warning=run_cfg.on_warning)
+        if run_cfg.engine is not None:
+            self.policy = dataclasses.replace(
+                self.policy, engine=run_cfg.engine)
         seed = run_cfg.seed if seed is None else seed
         self.record_to = record_to
         # the simulated S3: warning-window client snapshots land here
@@ -105,6 +110,10 @@ class FLCloudRunner:
                 raise ValueError(
                     "the fleet path does not support TrainerHooks; "
                     "pass fleet=False to force the per-object engines")
+            if run_cfg.update_payload_mb is not None:
+                raise ValueError(
+                    "the fleet path does not model comms; unset "
+                    "update_payload_mb or pass fleet=False")
             self.bus = EventBus()
             self.recorder = None
             if record or record_to is not None:
@@ -183,13 +192,33 @@ class FLCloudRunner:
                 ckpt_store=self.ckpt_store,
                 executor=self.executor))
         self.hooks = hooks
+        self.comms = self._build_comms()
         self.engine = get_engine(self.policy.engine)(EngineContext(
             run_cfg=run_cfg, cloud_cfg=self.cloud_cfg,
             sched_cfg=self.sched_cfg, policy=self.policy, sim=self.sim,
             cluster=self.cluster, strategies=self.strategies,
             accountant=self.accountant, timeline=self.timeline,
             rng=np.random.RandomState(seed + 101), hooks=hooks,
-            ckpt_store=self.ckpt_store))
+            ckpt_store=self.ckpt_store, comms=self.comms))
+
+    def _build_comms(self) -> Optional[CommsModel]:
+        """Comms modeling is strictly opt-in: hooks that expose a real
+        payload win over the modeled `FLRunConfig.update_payload_mb`;
+        with neither, uploads stay instantaneous and free and no comms
+        events are published (every pre-v7 stream is unchanged)."""
+        quantized = self.run_cfg.quantize_updates
+        payload: Optional[UpdatePayload] = None
+        if self.hooks is not None:
+            # getattr: duck-typed hooks predating `update_payload` pass
+            sizer = getattr(self.hooks, "update_payload", None)
+            payload = sizer(quantized=quantized) if sizer else None
+        if payload is None and self.run_cfg.update_payload_mb is not None:
+            payload = UpdatePayload.from_mb(self.run_cfg.update_payload_mb,
+                                            quantized=quantized)
+        if payload is None:
+            return None
+        return CommsModel(payload, UplinkChannel.from_market(
+            self.sim.market))
 
     # ------------------------------------------------------------------
     def _fleet_mode(self) -> bool:

@@ -31,7 +31,7 @@ from repro.core.events import (ClientStateChanged, EventBus, RoundCompleted,
 class Segment:
     """One closed span of a client's Fig-4 operational state."""
     client: str
-    state: str          # spinup | training | idle | savings
+    state: str          # spinup | training | uploading | idle | savings
     t0: float
     t1: float
 
@@ -153,4 +153,5 @@ def replay_result(source: Union[str, Path, "EventReplayer"]) -> "RunResult":
         excluded_clients=list(done.excluded_clients),
         per_round_participants=per_round,
         checkpoint_cost=accountant.checkpoint_cost_total(),
+        comm_cost=accountant.transfer_cost_total(),
         has_client_costs=has_clients)

@@ -1,0 +1,357 @@
+"""Real-training bridge: sharded jax_pallas client steps in the FL loop.
+
+`MeshTrainerHooks` is the `TrainerHooks` implementation that replaces
+hand-set epoch times and toy NumPy clients with the repo's real model
+stack: `models/lm.py` forward/backward (flash-attention path included)
+on a `(pod, data, model)` mesh where each pod hosts one FL client
+(`fl/mesh_fl.py`, DESIGN.md §2). On CPU the mesh runs via the XLA
+host-device trick — callers must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax is
+imported (see `examples/mesh_fl_lm.py`; `benchmarks/table1.py
+--real-training` and tests/test_training.py both do this).
+
+Engine protocol mapping: the simulator calls `run_local(c, r)` at each
+client's simulated epoch-completion instant — the hooks only mark the
+client as a round participant there — and the actual jitted compute
+runs once per round inside `aggregate`, which local-trains every client
+slot in one vmapped scan and folds the *participants'* updates into the
+global model (non-participants get weight 0 and keep their previous
+momentum). Staleness folds into the FedAvg weights by the FedBuff
+1/sqrt(1+s) discount, so the async engine's reports are honored.
+
+Quantized updates (`quantize=True`) round-trip every participant's
+per-leaf delta through the `kernels/grad_quant` int8 block codec before
+the weighted average — the int8 payload the comms subsystem bills
+(`comms/payload.py` mirrors the codec's exact byte layout) is the same
+one the real `aggregate()` consumes.
+
+Calibration (`calibrate` / `calibrated_profiles`) anchors simulated
+time to real compute: it wall-clocks the jitted round, cross-checks the
+measurement against a roofline estimate built from the compiled HLO's
+FLOP/byte counts and *measured host peaks*
+(`launch.roofline.estimate_step_time`), and rewrites
+`ClientProfile.mean_epoch_s` from the measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import configs
+from repro.common import compat
+from repro.common.config import ClientProfile
+from repro.comms.payload import UpdatePayload
+from repro.data.synthetic import token_stream
+from repro.fl.server import JaxTrainerHooks
+from repro.fl.types import TrainerHooks
+from repro.kernels.grad_quant import ops as gq
+from repro.models import lm
+from repro.sharding import rules as R
+
+
+def _client_mesh(n_clients: int) -> jax.sharding.Mesh:
+    """A `(pod=n, data=1, model=1)` mesh over the first `n` host
+    devices — `jax.make_mesh` insists on using every device, so subsets
+    build the mesh directly."""
+    devices = jax.devices()
+    if len(devices) < n_clients:
+        raise ValueError(
+            f"need {n_clients} devices for {n_clients} clients, have "
+            f"{len(devices)}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_clients} "
+            f"before importing jax")
+    return jax.sharding.Mesh(
+        np.array(devices[:n_clients]).reshape(n_clients, 1, 1),
+        ("pod", "data", "model"))
+
+
+class MeshTrainerHooks(TrainerHooks):
+    """Real sharded LM training behind the engine hook protocol (see
+    module docstring for the round mapping)."""
+
+    def __init__(self, clients: Sequence[str],
+                 model: str = "phi3-mini-3.8b", smoke: bool = True,
+                 local_steps: int = 4, batch: int = 8, seq: int = 32,
+                 lr: float = 5e-3, quantize: bool = False,
+                 use_pallas: bool = False, seed: int = 0,
+                 weights: Optional[Dict[str, float]] = None):
+        self.clients = list(clients)
+        self.slot = {c: i for i, c in enumerate(self.clients)}
+        if len(self.slot) != len(self.clients):
+            raise ValueError("duplicate client names")
+        self.cfg = configs.get_config(model, smoke=smoke)
+        self.local_steps = local_steps
+        self.batch = batch
+        self.seq = seq
+        self.quantize = quantize
+        self.use_pallas = use_pallas
+        self._lr = lr
+        n = len(self.clients)
+        self.mesh = _client_mesh(n)
+        self.shard = R.ShardingCtx(self.mesh, R.make_rules("train"))
+        params = lm.init_params(self.cfg, jax.random.PRNGKey(seed))
+        from repro.fl import mesh_fl
+        self.params_stk = mesh_fl.stack_params_for_clients(params, n)
+        self.mu_stk = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), self.params_stk)
+        self._base_w = np.array(
+            [float((weights or {}).get(c, 1.0)) for c in self.clients])
+        self._streams = [token_stream(self.cfg.vocab_size, batch, seq,
+                                      seed=seed + 17 * i)
+                         for i in range(n)]
+        self._participants: Dict[str, int] = {}   # client -> last round
+        self.losses: List[dict] = []              # per-aggregation record
+        self._local_fn = jax.jit(jax.vmap(self._local_train))
+        self._avg_fn = jax.jit(self._weighted_delta_avg)
+
+    # ------------------------------------------------------------------
+    # Jitted pieces.
+    # ------------------------------------------------------------------
+    def _local_train(self, params, mu, client_batches):
+        """`local_steps` SGD-momentum steps on one client slot (the
+        same inline optimizer as `mesh_fl.make_fl_round_step`)."""
+        cfg, lr = self.cfg, self._lr
+
+        def step(carry, batch):
+            p, m = carry
+            loss, g = jax.value_and_grad(
+                lambda pp: lm.loss_fn(pp, cfg, batch,
+                                      shard=self.shard))(p)
+            m = jax.tree.map(
+                lambda mi, gi: 0.9 * mi + gi.astype(jnp.float32), m, g)
+            p = jax.tree.map(
+                lambda pi, mi: (pi.astype(jnp.float32)
+                                - lr * mi).astype(pi.dtype), p, m)
+            return (p, m), loss
+
+        (params, mu), losses = lax.scan(step, (params, mu),
+                                        client_batches)
+        return params, mu, losses
+
+    @staticmethod
+    def _weighted_delta_avg(deltas, global_p, w):
+        """Weighted mean of per-client fp32 deltas, applied to the
+        global model and re-broadcast to every client slot."""
+        wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+        def one(d, g):
+            avg = jnp.einsum("c...,c->...", d, wn)
+            new_g = g.astype(jnp.float32) + avg
+            return jnp.broadcast_to(new_g[None].astype(g.dtype),
+                                    d.shape)
+
+        return jax.tree.map(one, deltas, global_p)
+
+    def _quant_roundtrip(self, deltas):
+        """Round-trip every participant's per-leaf delta through the
+        grad_quant int8 block codec — the aggregated update is built
+        from exactly the payload the comms subsystem bills."""
+        def one_leaf(d):
+            per_client = d.shape[1:]
+
+            def rt(x):
+                q, s = gq.quantize(x, use_pallas=self.use_pallas)
+                return gq.dequantize(q, s, per_client, jnp.float32,
+                                     use_pallas=self.use_pallas)
+
+            return jax.vmap(rt)(d)
+
+        return jax.tree.map(one_leaf, deltas)
+
+    # ------------------------------------------------------------------
+    # TrainerHooks protocol.
+    # ------------------------------------------------------------------
+    def run_local(self, client: str, round_idx: int) -> None:
+        """Mark the client's round-`round_idx` update as produced; the
+        jitted compute itself batches into `aggregate` (one vmapped
+        round per aggregation, every pod training in parallel)."""
+        if client not in self.slot:
+            raise KeyError(f"unknown client {client!r}")
+        self._participants[client] = round_idx
+
+    def aggregate(self, participants: List[str], round_idx: int,
+                  staleness: Optional[Dict[str, int]] = None) -> None:
+        """Run the real round: vmapped local training on every slot,
+        then fold the participants' (optionally int8-round-tripped)
+        deltas into the global model with staleness-discounted FedAvg
+        weights."""
+        live = [c for c in participants if c in self._participants]
+        if not live:
+            return
+        stale = staleness or {}
+        batches = self._next_batches()
+        new_p, new_mu, losses = self._run_round(batches)
+        mask = np.zeros(len(self.clients))
+        for c in set(live):
+            mask[self.slot[c]] = (
+                self._base_w[self.slot[c]]
+                * JaxTrainerHooks.staleness_discount(stale.get(c, 0)))
+        w = jnp.asarray(mask, jnp.float32)
+        global_p = jax.tree.map(lambda p: p[0], self.params_stk)
+        deltas = jax.tree.map(
+            lambda np_, g: np_.astype(jnp.float32)
+            - g.astype(jnp.float32)[None], new_p, global_p)
+        if self.quantize:
+            deltas = self._quant_roundtrip(deltas)
+        with compat.set_mesh(self.mesh):
+            self.params_stk = self._avg_fn(deltas, global_p, w)
+        # only participants actually trained: the rest keep their
+        # momentum (their slot's compute was masked out of the average)
+        keep = jnp.asarray(mask > 0)
+        self.mu_stk = jax.tree.map(
+            lambda new, old: jnp.where(
+                keep.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
+            new_mu, self.mu_stk)
+        losses = np.asarray(losses)
+        self.losses.append({
+            "round": round_idx,
+            "mean_loss": float(np.mean(
+                [losses[self.slot[c]].mean() for c in set(live)]))})
+        for c in live:
+            self._participants.pop(c, None)
+
+    def update_payload(self, quantized: bool = False) -> UpdatePayload:
+        """Byte-exact size of one client's update: the global param
+        pytree in the requested wire format."""
+        global_p = jax.tree.map(lambda p: p[0], self.params_stk)
+        return UpdatePayload.from_tree(global_p, quantized=quantized)
+
+    # ------------------------------------------------------------------
+    # Round execution + measurement.
+    # ------------------------------------------------------------------
+    def _next_batches(self):
+        stacked = {"tokens": [], "labels": []}
+        for s in self._streams:
+            rows = [next(s) for _ in range(self.local_steps)]
+            stacked["tokens"].append(np.stack([r["tokens"] for r in rows]))
+            stacked["labels"].append(np.stack([r["labels"] for r in rows]))
+        return {k: jnp.asarray(np.stack(v)) for k, v in stacked.items()}
+
+    def _run_round(self, batches):
+        with compat.set_mesh(self.mesh):
+            return self._local_fn(self.params_stk, self.mu_stk, batches)
+
+    def global_params(self):
+        """The current global model (slot 0 of the stacked params — all
+        slots are identical after every aggregation)."""
+        return jax.tree.map(lambda p: p[0], self.params_stk)
+
+    def final_loss(self) -> float:
+        """Mean participant loss of the last aggregation (inf before
+        the first one) — the accuracy side of the egress trade."""
+        return self.losses[-1]["mean_loss"] if self.losses \
+            else float("inf")
+
+    def measure_round_s(self, warmup: int = 1, iters: int = 2) -> float:
+        """Wall-clock one jitted round (local training of every slot)
+        on held-out batches, after `warmup` compile/warm runs. State is
+        not advanced."""
+        batches = self._next_batches()
+        for _ in range(max(warmup, 1)):
+            out = self._run_round(batches)
+            jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(max(iters, 1)):
+            out = self._run_round(batches)
+            jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / max(iters, 1)
+
+
+# ---------------------------------------------------------------------------
+# Calibration: measured step time -> simulated ClientProfile epoch times,
+# cross-checked against a measured-peak roofline estimate.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StepCalibration:
+    """One calibration measurement and its roofline cross-check."""
+    measured_round_s: float      # wall-clock of one jitted round
+    roofline_round_s: float      # estimate from HLO counts + host peaks
+    flops: float                 # total HLO FLOPs across all host devices
+    bytes_accessed: float        # total HLO HBM-proxy bytes
+    host_peak_flops: float       # measured matmul throughput (FLOP/s)
+    host_bw: float               # measured memory bandwidth (bytes/s)
+
+    @property
+    def ratio(self) -> float:
+        """measured / roofline — the cross-check the tests bound."""
+        return self.measured_round_s / self.roofline_round_s
+
+    def mean_epoch_s(self, time_scale: float = 1.0) -> float:
+        """The simulated epoch duration this measurement anchors:
+        one local-training round scaled by `time_scale` (the paper's
+        scaled-duration simulation knob)."""
+        return self.measured_round_s * time_scale
+
+
+def _measure_host_peaks(dim: int = 256, iters: int = 8):
+    """Measured host peaks for the roofline cross-check: achievable
+    matmul FLOP/s and memory copy bandwidth at a scale comparable to
+    the smoke model's ops, so the estimate carries the same dispatch
+    overhead the measured step pays."""
+    a = jnp.asarray(np.random.RandomState(0).randn(dim, dim), jnp.float32)
+    f = jax.jit(lambda x: x @ x)
+    jax.block_until_ready(f(a))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        a = f(a)
+    jax.block_until_ready(a)
+    flops_s = iters * 2.0 * dim ** 3 / (time.perf_counter() - t0)
+
+    big = jnp.asarray(np.zeros((1 << 22,), np.float32))  # 16 MB
+    g = jax.jit(lambda x: x + 1.0)
+    jax.block_until_ready(g(big))
+    t0 = time.perf_counter()
+    out = big
+    for _ in range(iters):
+        out = g(out)
+    jax.block_until_ready(out)
+    bw = iters * 2.0 * big.size * 4 / (time.perf_counter() - t0)
+    return flops_s, bw
+
+
+def calibrate(hooks: MeshTrainerHooks, warmup: int = 1,
+              iters: int = 2) -> StepCalibration:
+    """Measure one round's wall-clock and cross-check it against the
+    roofline estimate built from the compiled module's HLO FLOP/byte
+    counts and measured host peaks. Host devices share one physical
+    CPU, so per-device counts scale by the device (client) count and
+    the terms combine serially (`combine="sum"`)."""
+    from repro.launch import hlo_analysis as HA
+    from repro.launch.roofline import estimate_step_time
+
+    measured = hooks.measure_round_s(warmup=warmup, iters=iters)
+    batches = hooks._next_batches()
+    with compat.set_mesh(hooks.mesh):
+        compiled = hooks._local_fn.lower(
+            hooks.params_stk, hooks.mu_stk, batches).compile()
+    hc = HA.analyze_hlo_text(compiled.as_text())
+    n = len(hooks.clients)
+    flops, nbytes = hc.flops * n, hc.hbm_bytes * n
+    peak_flops, bw = _measure_host_peaks()
+    roofline = estimate_step_time(flops, nbytes, peak_flops=peak_flops,
+                                  hbm_bw=bw, combine="sum")
+    return StepCalibration(measured_round_s=measured,
+                           roofline_round_s=roofline, flops=flops,
+                           bytes_accessed=nbytes,
+                           host_peak_flops=peak_flops, host_bw=bw)
+
+
+def calibrated_profiles(profiles: Sequence[ClientProfile],
+                        cal: StepCalibration,
+                        time_scale: float = 1.0) -> List[ClientProfile]:
+    """Rewrite each profile's `mean_epoch_s` from the measurement —
+    simulated durations anchored to real compute instead of config
+    guesses. Relative client speed (each profile's epoch time vs the
+    cohort mean) is preserved so heterogeneity survives calibration."""
+    base = float(np.mean([p.mean_epoch_s for p in profiles]))
+    anchor = cal.mean_epoch_s(time_scale)
+    return [dataclasses.replace(
+        p, mean_epoch_s=anchor * (p.mean_epoch_s / base if base > 0
+                                  else 1.0))
+            for p in profiles]

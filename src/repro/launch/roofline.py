@@ -158,6 +158,30 @@ def analyze(compiled, *, n_chips: int, scan_trip_count: int,
                             if v})
 
 
+def estimate_step_time(flops: float, bytes_accessed: float, *,
+                       peak_flops: Optional[float] = None,
+                       hbm_bw: Optional[float] = None,
+                       combine: str = "max") -> float:
+    """Roofline wall-clock estimate for one step from its FLOP and byte
+    counts, against overridable hardware peaks.
+
+    Defaults use the TPU constants in `launch.mesh` (the dry-run
+    analysis above); the training calibrator
+    (`repro.fl.training.calibrate`) passes *measured* host peaks
+    instead, so the same formula cross-checks a CPU-measured step time.
+    `combine="max"` is the classic roofline bound (terms overlap);
+    `"sum"` models a serial host where compute and memory traffic share
+    one pipe — the right shape for the CPU host-device trick.
+    """
+    peak_flops = M.PEAK_FLOPS_BF16 if peak_flops is None else peak_flops
+    hbm_bw = M.HBM_BW if hbm_bw is None else hbm_bw
+    compute_s = flops / peak_flops
+    memory_s = bytes_accessed / hbm_bw
+    if combine == "sum":
+        return compute_s + memory_s
+    return max(compute_s, memory_s)
+
+
 # ---------------------------------------------------------------------------
 # Model-FLOPs (the "useful work" yardstick).
 # ---------------------------------------------------------------------------

@@ -8,13 +8,18 @@ Schema (documented in docs/sweep.md):
 
   {
     "grid": {"policies": [...], "markets": [...], "models": [...],
-             "seeds": [...], "n_clients": N, "n_epochs": N},
+             "engines": [...], "seeds": [...],
+             "n_clients": N, "n_epochs": N},
     "cells": {
       "<policy>|<market>|<model>": {
         "<metric>": {mean, p10, p50, p90, ci_lo, ci_hi, n}, ...
       }, ...
     }
   }
+
+Cells swept with an explicit engine override carry a fourth key part,
+`<policy>|<market>|<model>|<engine>`; default-engine cells keep the
+3-part key, so pre-engine-axis reports diff clean against new ones.
 """
 from __future__ import annotations
 
@@ -28,8 +33,13 @@ from repro.sweep.stats import summarize
 
 
 def cell_key(spec: ScenarioSpec) -> str:
-    """The report key of a spec's (policy, market, model) cell."""
-    return f"{spec.policy}|{spec.market}|{spec.preemption_model}"
+    """The report key of a spec's (policy, market, model[, engine])
+    cell. The engine part appears only when the spec pins one, keeping
+    default-engine keys (and every pre-engine-axis report) unchanged."""
+    key = f"{spec.policy}|{spec.market}|{spec.preemption_model}"
+    if spec.engine:
+        key += f"|{spec.engine}"
+    return key
 
 
 def build_report(specs: Sequence[ScenarioSpec],
@@ -58,6 +68,7 @@ def build_report(specs: Sequence[ScenarioSpec],
             "policies": sorted({s.policy for s in specs}),
             "markets": sorted({s.market for s in specs}),
             "models": sorted({s.preemption_model for s in specs}),
+            "engines": sorted({s.engine for s in specs}),
             "seeds": sorted({s.seed for s in specs}),
             "n_clients": specs[0].n_clients if specs else 0,
             "n_epochs": specs[0].n_epochs if specs else 0,
@@ -86,16 +97,18 @@ def ranking_table(report: Dict, metric: str = "cost") -> str:
     sweep.py` prints."""
     by_market: Dict[str, List] = defaultdict(list)
     for key, cell in report["cells"].items():
-        policy, market, model = key.split("|")
+        policy, market, model, *rest = key.split("|")
+        engine = rest[0] if rest else ""
+        label = f"{policy}[{engine}]" if engine else policy
         s = cell[metric]
-        by_market[market].append((s["mean"], policy, model, s))
+        by_market[market].append((s["mean"], label, model, s))
     lines = []
     for market in sorted(by_market):
         lines.append(f"{market}:")
-        for rank, (mean, policy, model, s) in enumerate(
+        for rank, (mean, label, model, s) in enumerate(
                 sorted(by_market[market]), start=1):
             lines.append(
-                f"  {rank}. {policy:<20} {mean:>10.4f} "
+                f"  {rank}. {label:<20} {mean:>10.4f} "
                 f"[{s['ci_lo']:.4f}, {s['ci_hi']:.4f}]  "
                 f"(p10 {s['p10']:.4f} / p90 {s['p90']:.4f}, "
                 f"model={model}, n={s['n']})")

@@ -49,7 +49,7 @@ def run_cell(spec: ScenarioSpec) -> Dict[str, float]:
         preemption_rate_per_hr=spec.preemption_rate_per_hr)
     cfg = FLRunConfig(dataset="sweep", clients=_clients(spec),
                       n_epochs=spec.n_epochs, policy=spec.policy,
-                      seed=spec.seed)
+                      engine=(spec.engine or None), seed=spec.seed)
     res = FLCloudRunner(cfg, cloud_cfg=cloud).run()
     return {
         "cost": float(res.total_cost),

@@ -54,6 +54,10 @@ class ScenarioSpec:
     n_clients: int = 8             # cross-silo pool per run
     n_epochs: int = 6              # FL rounds per run
     preemption_rate_per_hr: float = 0.15   # background churn
+    # round-engine override: "" keeps the policy's own engine (so
+    # fedcostaware_async stays async); "sync" / "async_buffered" pin it
+    # regardless of policy — the sweep's engine axis
+    engine: str = ""
 
 
 def market_config(name: str, seed: int) -> MarketConfig:
@@ -86,21 +90,27 @@ def build_grid(policies: Sequence[str], markets: Sequence[str],
                seeds: Sequence[int],
                models: Optional[Sequence[str]] = None,
                n_clients: int = 8, n_epochs: int = 6,
+               engines: Optional[Sequence[str]] = None,
                ) -> List[ScenarioSpec]:
     """The full sweep grid, in deterministic (policy, market, model,
-    seed) order. `models=None` gives each market its registered default
-    (`MARKET_MODELS`); an explicit list crosses every model with every
-    market."""
+    engine, seed) order. `models=None` gives each market its registered
+    default (`MARKET_MODELS`); an explicit list crosses every model
+    with every market. `engines=None` keeps each policy's own round
+    engine; an explicit list (e.g. ``["sync", "async_buffered"]``)
+    crosses the engine override into the grid as a fourth axis."""
     specs: List[ScenarioSpec] = []
+    cell_engines = list(engines) if engines is not None else [""]
     for policy in policies:
         for market in markets:
             cell_models = (models if models is not None
                            else [MARKET_MODELS.get(market,
                                                    "price_coupled")])
             for model in cell_models:
-                for seed in seeds:
-                    specs.append(ScenarioSpec(
-                        policy=policy, market=market,
-                        preemption_model=model, seed=seed,
-                        n_clients=n_clients, n_epochs=n_epochs))
+                for engine in cell_engines:
+                    for seed in seeds:
+                        specs.append(ScenarioSpec(
+                            policy=policy, market=market,
+                            preemption_model=model, seed=seed,
+                            n_clients=n_clients, n_epochs=n_epochs,
+                            engine=engine))
     return specs

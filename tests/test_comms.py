@@ -1,0 +1,240 @@
+"""Communication-cost subsystem (repro.comms): payload byte math,
+uplink channel timing, engine makespan extension, egress billing
+through the CostAccountant, and live-vs-replay agreement — plus the
+zero-default guarantee that runs without comms modeling are untouched.
+"""
+import math
+
+import pytest
+
+from repro.cloud.accounting import CostAccountant
+from repro.cloud.pricing import SpotMarket
+from repro.comms import (CommsModel, TransferRates, UpdatePayload,
+                         UplinkChannel, fp32_leaf_bytes,
+                         quantized_leaf_bytes)
+from repro.common.config import (CloudConfig, ClientProfile, FLRunConfig,
+                                 MarketConfig, ProviderConfig)
+from repro.core.eventlog import EventReplayer
+from repro.core.events import ClientUpdateSent, EventBus, TransferBilled
+from repro.fl.runner import FLCloudRunner
+from repro.fl.telemetry import replay_result
+
+CLIENTS = (
+    ClientProfile("slow", mean_epoch_s=900, jitter=0.0, n_samples=3),
+    ClientProfile("mid", mean_epoch_s=450, jitter=0.0, n_samples=2),
+    ClientProfile("fast", mean_epoch_s=150, jitter=0.0, n_samples=1),
+)
+
+# one provider with every comms knob set: 100 Mbps uplink, an
+# overridden zone, and a visible egress price
+COMM_MARKET = MarketConfig(providers=(
+    ProviderConfig(name="aws", on_demand_rate=1.0, spot_rate_mean=0.4,
+                   spot_rate_sigma=0.0, n_zones=2,
+                   update_egress_usd_per_mb=0.001,
+                   uplink_mbps=100.0,
+                   zone_uplink_mbps=(("aws-z1", 50.0),)),))
+
+
+def run_policy(policy="fedcostaware", clients=CLIENTS, n_epochs=4,
+               cloud=None, record=False, **cfg_kw):
+    cfg = FLRunConfig(dataset="t", clients=clients, n_epochs=n_epochs,
+                      policy=policy, seed=0, **cfg_kw)
+    r = FLCloudRunner(cfg, cloud_cfg=cloud or CloudConfig(
+        spot_rate_sigma=0.0), record=record)
+    return r, r.run()
+
+
+# ---------------------------------------------------------------------------
+# Payload byte math.
+# ---------------------------------------------------------------------------
+class TestPayload:
+    def test_fp32_bytes(self):
+        assert fp32_leaf_bytes(10) == 40
+        assert UpdatePayload.from_mb(8.0).num_bytes == 8 * (1 << 20)
+        assert UpdatePayload.from_mb(8.0).size_mb == pytest.approx(8.0)
+
+    def test_quantized_block_layout(self):
+        from repro.kernels.grad_quant.ops import BLOCK
+        # one partial block still pays a full row + one scale
+        assert quantized_leaf_bytes(1) == BLOCK + 4
+        assert quantized_leaf_bytes(BLOCK) == BLOCK + 4
+        assert quantized_leaf_bytes(BLOCK + 1) == 2 * (BLOCK + 4)
+        # empty leaves clamp to one block (quantize's own minimum)
+        assert quantized_leaf_bytes(0) == BLOCK + 4
+
+    def test_quantized_bytes_match_real_quantize_output(self):
+        """The accounting formula equals the true wire size of the
+        arrays `grad_quant.ops.quantize` actually produces."""
+        import numpy as np
+        from repro.kernels.grad_quant import ops as gq
+        for n in (1, 7, 2048, 2049, 5000):
+            x = np.linspace(-1.0, 1.0, n, dtype=np.float32)
+            q, scales = gq.quantize(x, use_pallas=False)
+            wire = q.size * q.dtype.itemsize + \
+                scales.size * scales.dtype.itemsize
+            assert quantized_leaf_bytes(n) == wire, n
+
+    def test_from_tree_sums_per_leaf(self):
+        import numpy as np
+        tree = {"a": np.zeros((3, 5), np.float32),
+                "b": np.zeros((7,), np.float32)}
+        p = UpdatePayload.from_tree(tree)
+        assert (p.n_params, p.n_leaves) == (22, 2)
+        assert p.num_bytes == 22 * 4
+        q = UpdatePayload.from_tree(tree, quantized=True)
+        assert q.num_bytes == quantized_leaf_bytes(15) + \
+            quantized_leaf_bytes(7)
+        assert q.quantized and not p.quantized
+
+    def test_quantization_shrinks_large_payloads(self):
+        big = UpdatePayload.from_mb(8.0)
+        small = UpdatePayload.from_mb(8.0, quantized=True)
+        assert small.num_bytes < big.num_bytes
+        # asymptotically BLOCK int8 + 4 scale bytes per BLOCK fp32 bytes
+        assert small.num_bytes / big.num_bytes == pytest.approx(
+            0.25, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Uplink channel.
+# ---------------------------------------------------------------------------
+class TestChannel:
+    def test_transfer_time_and_zone_override(self):
+        ch = UplinkChannel({"aws": (100.0, {"aws-z1": 50.0})})
+        mb = 1 << 20
+        assert ch.transfer_s(mb, "aws") == pytest.approx(mb * 8 / 100e6)
+        assert ch.transfer_s(mb, "aws", "aws-z1") == pytest.approx(
+            mb * 8 / 50e6)
+        assert ch.transfer_s(mb, "aws", "aws-z2") == pytest.approx(
+            mb * 8 / 100e6)             # unknown zone -> provider base
+
+    def test_unmodeled_bandwidth_is_instantaneous(self):
+        ch = UplinkChannel({"aws": (0.0, {})})
+        assert ch.transfer_s(1 << 20, "aws") == 0.0
+        assert UplinkChannel({}).transfer_s(1 << 20, "gcp") == 0.0
+
+    def test_from_market_lifts_provider_fields(self):
+        market = SpotMarket.for_cloud_config(
+            CloudConfig(market=COMM_MARKET), seed=0)
+        ch = UplinkChannel.from_market(market)
+        assert ch.uplink_mbps("aws") == 100.0
+        assert ch.uplink_mbps("aws", "aws-z1") == 50.0
+        assert ch.uplink_mbps("") == 100.0   # default-provider alias
+
+    def test_comms_model_bundles_payload_and_channel(self):
+        m = CommsModel(UpdatePayload.from_mb(1.0),
+                       UplinkChannel({"": (100.0, {})}))
+        assert m.size_mb == pytest.approx(1.0)
+        assert not m.quantized
+        assert m.transfer_s() == pytest.approx((1 << 20) * 8 / 100e6)
+
+
+# ---------------------------------------------------------------------------
+# Billing: TransferRates -> CostAccountant, live and replay.
+# ---------------------------------------------------------------------------
+class TestTransferBilling:
+    def test_transfer_rates(self):
+        r = TransferRates(egress_usd_per_mb=0.001)
+        assert r.transfer_cost(8.0) == pytest.approx(0.008)
+        assert r.transfer_cost(0.0) == 0.0
+        assert TransferRates().transfer_cost(8.0) == 0.0
+
+    def test_live_accountant_prices_update_sent(self):
+        bus = EventBus()
+        prices = SpotMarket.for_cloud_config(
+            CloudConfig(market=COMM_MARKET))
+        acc = CostAccountant(bus, prices=prices)
+        bus.publish(ClientUpdateSent(10.0, "c0", 0, size_mb=8.0))
+        assert acc.transfer_cost("c0") == pytest.approx(0.008)
+        assert acc.transfer_cost_total() == pytest.approx(0.008)
+        assert acc.client_cost("c0") == pytest.approx(0.008)
+
+    def test_replay_accountant_folds_transfer_billed(self):
+        bus = EventBus()
+        acc = CostAccountant(bus, prices=None)      # replay mode
+        bus.publish(TransferBilled(10.0, "c0", 0.008))
+        bus.publish(TransferBilled(11.0, "c0", 0.002))
+        assert acc.transfer_cost("c0") == pytest.approx(0.010)
+        assert acc.total_cost() == pytest.approx(0.010)
+
+    def test_zero_rate_publishes_no_billed_event(self):
+        bus = EventBus()
+        seen = []
+        bus.subscribe(TransferBilled, seen.append)
+        acc = CostAccountant(bus, prices=SpotMarket.for_cloud_config(
+            CloudConfig()))
+        bus.publish(ClientUpdateSent(10.0, "c0", 0, size_mb=8.0))
+        assert seen == [] and acc.transfer_cost_total() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: engines stretch rounds by the upload and bill egress.
+# ---------------------------------------------------------------------------
+class TestEngineIntegration:
+    @pytest.mark.parametrize("policy",
+                             ["fedcostaware", "fedcostaware_async"])
+    def test_comms_extends_makespan_and_bills_egress(self, policy):
+        _, base = run_policy(policy)
+        _, comm = run_policy(policy, update_payload_mb=8.0,
+                             cloud=CloudConfig(market=COMM_MARKET))
+        assert base.comm_cost == 0.0
+        assert comm.comm_cost > 0.0
+        assert comm.makespan_s > 0.0
+
+    @pytest.mark.parametrize("policy",
+                             ["fedcostaware", "fedcostaware_async"])
+    def test_upload_events_recorded_and_replay_agrees(self, policy):
+        r, res = run_policy(policy, update_payload_mb=8.0, record=True,
+                            cloud=CloudConfig(market=COMM_MARKET))
+        types = [rec["type"] for rec in r.recorder.records]
+        assert "ClientUpdateSent" in types
+        assert "TransferBilled" in types
+        sent = [rec for rec in r.recorder.records
+                if rec["type"] == "ClientUpdateSent"]
+        assert all(s["size_mb"] == pytest.approx(8.0) for s in sent)
+        assert all(s["transfer_s"] > 0.0 for s in sent)
+        rep = replay_result(EventReplayer.loads(r.recorder.dumps()))
+        assert rep.total_cost == pytest.approx(res.total_cost, abs=1e-9)
+        assert rep.comm_cost == pytest.approx(res.comm_cost, abs=1e-9)
+        assert res.comm_cost == pytest.approx(0.008 * len(sent))
+
+    def test_upload_time_delays_sync_barrier(self):
+        """With a modeled uplink the same run takes longer: the barrier
+        waits for the slowest upload too."""
+        _, fast = run_policy(update_payload_mb=8.0,
+                             cloud=CloudConfig(market=COMM_MARKET))
+        no_uplink = MarketConfig(providers=(
+            dataclass_replace_provider(COMM_MARKET.providers[0]),))
+        _, instant = run_policy(update_payload_mb=8.0,
+                                cloud=CloudConfig(market=no_uplink))
+        assert fast.makespan_s > instant.makespan_s
+        # billing is independent of bandwidth modeling
+        assert fast.comm_cost == pytest.approx(instant.comm_cost)
+
+    def test_quantized_payload_bills_less(self):
+        _, fp = run_policy(update_payload_mb=8.0,
+                           cloud=CloudConfig(market=COMM_MARKET))
+        _, q = run_policy(update_payload_mb=8.0, quantize_updates=True,
+                          cloud=CloudConfig(market=COMM_MARKET))
+        assert 0.0 < q.comm_cost < fp.comm_cost
+
+    def test_default_runs_carry_no_comms_events(self):
+        r, res = run_policy(record=True)
+        types = {rec["type"] for rec in r.recorder.records}
+        assert "ClientUpdateSent" not in types
+        assert "TransferBilled" not in types
+        assert res.comm_cost == 0.0
+
+    def test_fleet_path_rejects_comms(self):
+        cfg = FLRunConfig(dataset="t", clients=CLIENTS, n_epochs=2,
+                          policy="fedcostaware", seed=0, fleet=True,
+                          update_payload_mb=8.0)
+        with pytest.raises(ValueError, match="fleet path"):
+            FLCloudRunner(cfg, cloud_cfg=CloudConfig(spot_rate_sigma=0.0))
+
+
+def dataclass_replace_provider(p: ProviderConfig) -> ProviderConfig:
+    """COMM_MARKET's provider with the uplink unmodeled (egress rates
+    kept), for the makespan-vs-billing separation test."""
+    import dataclasses
+    return dataclasses.replace(p, uplink_mbps=0.0, zone_uplink_mbps=())

@@ -44,6 +44,11 @@ PUBLIC_MODULES = [
     "src/repro/fl/cluster.py",
     "src/repro/fl/telemetry.py",
     "src/repro/fl/types.py",
+    "src/repro/fl/training.py",
+    "src/repro/comms/__init__.py",
+    "src/repro/comms/payload.py",
+    "src/repro/comms/channel.py",
+    "src/repro/comms/billing.py",
     "src/repro/checkpoint/store.py",
     "src/repro/checkpoint/snapshots.py",
 ]
@@ -52,7 +57,7 @@ DOC_COVERAGE_FLOOR = 0.9
 MARKDOWN_FILES = ["README.md", "benchmarks/README.md",
                   "docs/index.md", "docs/architecture.md",
                   "docs/events.md", "docs/markets.md",
-                  "docs/sweep.md"]
+                  "docs/sweep.md", "docs/training.md"]
 
 
 # ---------------------------------------------------------------------------

@@ -417,3 +417,18 @@ class TestStalenessReporting:
         hooks = self._Legacy()
         res = self._run(policy, hooks)
         assert hooks.calls == res.rounds_completed
+
+    def test_legacy_signature_warns_at_construction(self):
+        """The signature is sniffed once when the engine is built (not
+        per aggregation), and the legacy form deprecation-warns."""
+        with pytest.warns(DeprecationWarning,
+                          match="legacy 2-argument signature"):
+            self._run("fedcostaware", self._Legacy())
+
+    def test_staleness_signature_does_not_warn(self):
+        import warnings
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            self._run("fedcostaware_async", self._Recorder())
+        assert not [w for w in caught
+                    if "legacy 2-argument" in str(w.message)]

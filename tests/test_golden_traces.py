@@ -36,6 +36,7 @@ GOLDEN_V2_DIR = GOLDEN_DIR / "v2"
 GOLDEN_V3_DIR = GOLDEN_DIR / "v3"
 GOLDEN_V4_DIR = GOLDEN_DIR / "v4"
 GOLDEN_V5_DIR = GOLDEN_DIR / "v5"
+GOLDEN_V6_DIR = GOLDEN_DIR / "v6"
 FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
 
 CLOUD = CloudConfig(spot_rate_sigma=0.0)
@@ -455,13 +456,54 @@ class TestSchemaV5Compat:
         carry identical event bodies across the attribution bump — only
         the header's schema field moved."""
         h5, recs5 = load_golden(f"v5/{name}")
-        h6, recs6 = load_golden(name)
+        h6, recs6 = load_golden(f"v6/{name}")
         assert h5["schema"] == 5 and h6["schema"] == 6
         assert {k: v for k, v in h5.items() if k != "schema"} == \
             {k: v for k, v in h6.items() if k != "schema"}
         assert len(recs5) == len(recs6)
         for r5, r6 in zip(recs5, recs6):
             assert_json_equal(r6, r5)
+
+
+# ---------------------------------------------------------------------------
+# v6 -> v7 compat: the comms bump is purely additive (ClientUpdateSent +
+# TransferBilled, published only when a run enables comms modeling via
+# `FLRunConfig.update_payload_mb` or payload-exposing trainer hooks), so
+# archived schema-6 recordings must replay unchanged and differ from the
+# regenerated v7 goldens by the header alone — the acceptance proof that
+# zero-default transfer rates moved zero events.
+# ---------------------------------------------------------------------------
+class TestSchemaV6Compat:
+    V6_TRACES = TRACES + (FED_ISIC_TRACE,)
+
+    @pytest.mark.parametrize("name", V6_TRACES)
+    def test_v6_trace_loads(self, name):
+        rep = EventReplayer.load(GOLDEN_V6_DIR / f"{name}.events.jsonl")
+        assert rep.header["schema"] == 6
+
+    @pytest.mark.parametrize("trace", TRACES)
+    def test_v6_replay_matches_pinned_totals(self, trace):
+        rep = replay_result(GOLDEN_V6_DIR / f"{trace}.events.jsonl")
+        want = GOLDEN_TOTALS[trace]
+        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
+        for c, v in want["per_client"].items():
+            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
+        # pre-comms logs naturally carry no transfer spend
+        assert rep.comm_cost == 0.0
+
+    @pytest.mark.parametrize("name", V6_TRACES)
+    def test_v6_and_v7_streams_are_equivalent(self, name):
+        """Comms-free runs publish no upload/transfer events, so the
+        goldens carry identical event bodies across the comms bump —
+        only the header's schema field moved."""
+        h6, recs6 = load_golden(f"v6/{name}")
+        h7, recs7 = load_golden(name)
+        assert h6["schema"] == 6 and h7["schema"] == 7
+        assert {k: v for k, v in h6.items() if k != "schema"} == \
+            {k: v for k, v in h7.items() if k != "schema"}
+        assert len(recs6) == len(recs7)
+        for r6, r7 in zip(recs6, recs7):
+            assert_json_equal(r7, r6)
 
 
 # ---------------------------------------------------------------------------

@@ -240,3 +240,60 @@ def test_parse_op_line_tuple_type_with_comment():
     assert opcode == "while"
     assert "condition=%c.1" in rest
     assert _type_bytes(type_str) == 4 + 12 + 16
+
+# ---------------------------------------------------------------------------
+# Comms payload accounting vs the real quantizer: the billed egress
+# bytes are exactly the wire bytes `grad_quant.ops.quantize` produces,
+# and the ops-level roundtrip (flatten + pad to BLOCK rows) keeps the
+# per-leaf error inside the int8 step for every shape and dtype —
+# non-block-multiple sizes included.
+# ---------------------------------------------------------------------------
+_QUANT_SHAPES = [(1,), (3,), (17,), (255,), (2048,), (2049,),
+                 (7, 11), (5, 512), (3, 1024), (4097,)]
+
+
+@given(st.sampled_from(_QUANT_SHAPES),
+       st.sampled_from(["float32", "bfloat16"]),
+       st.integers(0, 2**31 - 1), st.floats(1e-4, 1e2))
+@settings(max_examples=40, deadline=None)
+def test_ops_quant_roundtrip_bounded_and_bytes_exact(shape, dtype,
+                                                     seed, scale):
+    from repro.comms.payload import quantized_leaf_bytes
+    from repro.kernels.grad_quant import ops as gq
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(*shape) * scale, dtype)
+    q, s = gq.quantize(x, use_pallas=False)
+    y = gq.dequantize(q, s, shape, dtype, use_pallas=False)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    xf = np.asarray(x, np.float32)
+    err = np.abs(np.asarray(y, np.float32) - xf)
+    amax = np.abs(xf).max()
+    # int8 step (amax/254 rounding x2 for a low-precision scale) plus
+    # the output dtype's own rounding (2^-9 relative for bf16)
+    assert np.all(err <= amax * (1.0 / 127.0 + 1.0 / 256.0) + 1e-6)
+    wire = q.size * q.dtype.itemsize + s.size * s.dtype.itemsize
+    n = int(np.prod(shape))
+    assert wire == quantized_leaf_bytes(n)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_pytree_quant_payload_accounting_exact(seed):
+    """`UpdatePayload.from_tree(quantized=True)` equals the summed wire
+    size of every leaf's real quantized arrays — billed egress is the
+    true upload, padding overhead included."""
+    from repro.comms.payload import UpdatePayload
+    from repro.kernels.grad_quant import ops as gq
+    rng = np.random.RandomState(seed)
+    tree = {"w": jnp.asarray(rng.randn(9, 33), jnp.float32),
+            "b": jnp.asarray(rng.randn(5), jnp.float32),
+            "deep": [jnp.asarray(rng.randn(2049), jnp.float32)]}
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        q, s = gq.quantize(leaf, use_pallas=False)
+        total += q.size * q.dtype.itemsize + s.size * s.dtype.itemsize
+        y = gq.dequantize(q, s, tuple(leaf.shape), jnp.float32,
+                          use_pallas=False)
+        amax = float(jnp.max(jnp.abs(leaf)))
+        assert float(jnp.max(jnp.abs(y - leaf))) <= amax / 127.0 + 1e-6
+    assert UpdatePayload.from_tree(tree, quantized=True).num_bytes == total

@@ -51,6 +51,14 @@ class TestGrid:
         with pytest.raises(ValueError, match="unknown sweep market"):
             market_config("mars", seed=0)
 
+    def test_engine_axis_crosses_the_grid(self):
+        specs = build_grid(engines=("sync", "async_buffered"),
+                           **SMALL_GRID)
+        assert len(specs) == 2 * 2 * 2 * 2
+        assert {s.engine for s in specs} == {"sync", "async_buffered"}
+        # default: the policy's own engine, spelled as ""
+        assert all(s.engine == "" for s in build_grid(**SMALL_GRID))
+
     def test_every_registered_market_builds(self):
         for name in MARKETS:
             cfg = market_config(name, seed=1)
@@ -135,6 +143,28 @@ class TestRunAndReport:
             assert cell["seeds"] == [0, 1]
             for m in METRICS:
                 assert cell[m]["n"] == 2
+
+    def test_engine_override_is_deterministic_and_distinct(self):
+        """The engine axis reaches the run: the same (policy, market,
+        seed) cell under sync vs async_buffered produces different —
+        and individually reproducible — metrics, keyed apart in the
+        report."""
+        specs = build_grid(policies=("fedcostaware",),
+                           markets=("baseline",), seeds=range(2),
+                           n_epochs=3, engines=("sync", "async_buffered"))
+        results = run_sweep(specs, parallel=False)
+        assert results == run_sweep(specs, parallel=False)
+        rep = build_report(specs, results)
+        keys = sorted(rep["cells"])
+        assert keys == [
+            "fedcostaware|baseline|price_coupled|async_buffered",
+            "fedcostaware|baseline|price_coupled|sync"]
+        sync_c = rep["cells"][keys[1]]["cost"]["mean"]
+        async_c = rep["cells"][keys[0]]["cost"]["mean"]
+        assert sync_c != async_c
+        assert rep["grid"]["engines"] == ["async_buffered", "sync"]
+        # default-engine specs keep the 3-part key (old reports intact)
+        assert cell_key(build_grid(**SMALL_GRID)[0]).count("|") == 2
 
     def test_report_length_mismatch_raises(self, small):
         specs, results = small
