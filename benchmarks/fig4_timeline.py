@@ -62,8 +62,13 @@ def main(argv=None):
     mode.add_argument("--record", metavar="EVENTS_JSONL", default=None,
                       help="record the fresh run's event log to this path")
     args = ap.parse_args(argv)
-    res, by_client, totals, desc = run(replay=args.replay,
-                                       record=args.record)
+    try:
+        res, by_client, totals, desc = run(replay=args.replay,
+                                           record=args.record)
+    except (ValueError, OSError) as e:
+        # truncated/corrupt JSONL or an unknown future schema: a
+        # one-line error and nonzero exit, not a raw traceback
+        raise SystemExit(f"error: {e}")
     width = 100
     scale = res.makespan_s / width
     src = f"replay of {args.replay}" if args.replay else "fresh run"

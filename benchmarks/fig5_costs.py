@@ -64,10 +64,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
     providers = tuple(p.strip() for p in args.providers.split(",")
                       if p.strip())
-    rounds, clients, table, res, desc = run(replay=args.replay,
-                                            record=args.record,
-                                            price_trace=args.price_trace,
-                                            providers=providers)
+    try:
+        rounds, clients, table, res, desc = run(
+            replay=args.replay, record=args.record,
+            price_trace=args.price_trace, providers=providers)
+    except (ValueError, OSError) as e:
+        # truncated/corrupt JSONL or an unknown future schema: a
+        # one-line error and nonzero exit, not a raw traceback
+        raise SystemExit(f"error: {e}")
     print(f"# {desc}")
     print("round," + ",".join(clients))
     for r in rounds:

@@ -29,6 +29,8 @@ Flags (documented in benchmarks/README.md):
                         beats plain spot on capacity_crunch with
                         non-overlapping bootstrap CIs (the CI smoke
                         gate)
+  --report              ranking tables for every metric + the pointer
+                        to the per-trace audit CLI (repro.cloud.report)
 """
 from __future__ import annotations
 
@@ -101,6 +103,10 @@ def main(argv: Optional[Sequence[str]] = None):
     ap.add_argument("--assert-crunch-win", action="store_true",
                     help="fail unless fedcostaware beats spot on "
                          "capacity_crunch with disjoint CIs")
+    ap.add_argument("--report", action="store_true",
+                    help="print the ranking table for every metric "
+                         "(not just --metric) plus the pointer to the "
+                         "per-trace audit CLI, repro.cloud.report")
     args = ap.parse_args(argv)
 
     specs = build_grid(args.policies, args.markets,
@@ -118,7 +124,15 @@ def main(argv: Optional[Sequence[str]] = None):
     out = Path(args.out)
     out.write_text(dumps(report))
     print(f"# wrote {out} ({len(report['cells'])} cells)")
-    print(ranking_table(report, metric=args.metric))
+    if args.report:
+        for metric in METRICS:
+            print(ranking_table(report, metric=metric))
+        print("# per-trace dollar audit: record runs with "
+              "`benchmarks/table1.py --record-dir DIR` and inspect "
+              "them with `python -m repro.cloud.report summary/"
+              "trends/reconcile` (docs/reporting.md)")
+    else:
+        print(ranking_table(report, metric=args.metric))
     if args.assert_crunch_win:
         assert_crunch_win(report)
     return report

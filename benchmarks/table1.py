@@ -308,7 +308,15 @@ def main(argv=None):
                          "arms; fail unless quantized egress dollars "
                          "are strictly lower at a bounded final-loss "
                          "delta")
+    ap.add_argument("--report", action="store_true",
+                    help="after the runs, print the per-client/provider"
+                         "/zone spend breakdown of every recorded "
+                         "trace (requires --record-dir; the "
+                         "`python -m repro.cloud.report` summary)")
     args = ap.parse_args(argv)
+    if args.report and args.record_dir is None:
+        ap.error("--report needs --record-dir (it summarizes the "
+                 "recorded traces)")
 
     def fmt(v):
         return "" if v is None else v
@@ -342,6 +350,12 @@ def main(argv=None):
               f"{fmt(r['paper_cost'])},{fmt(r['rel_err'])},"
               f"{fmt(r.get('savings_vs_od_pct'))},"
               f"{fmt(r.get('paper_savings_pct'))}")
+    if args.report:
+        from repro.cloud.report import render_summary, summarize_path
+        traces = sorted(Path(args.record_dir).glob("*.events.jsonl"))
+        print()
+        print("\n\n".join(render_summary(summarize_path(p))
+                          for p in traces))
 
 
 if __name__ == "__main__":

@@ -196,6 +196,75 @@ class EventRecorder:
 
 
 # ---------------------------------------------------------------------------
+# Read-only stream access (shared by the replayer and the reporting
+# CLI, repro.cloud.report). Errors are one-line ValueErrors naming the
+# source and line number — replay-consuming entry points print them
+# verbatim instead of a raw traceback on truncated/corrupt logs.
+# ---------------------------------------------------------------------------
+def _parse_header(line: str, source: str) -> Dict[str, Any]:
+    try:
+        header = json.loads(line)
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"{source}: header line is not valid JSON ({e.msg}) — "
+            f"corrupt file or not a recorded event log") from None
+    if not isinstance(header, dict) or "schema" not in header:
+        raise ValueError(
+            f"{source}: header carries no schema field — not a "
+            f"recorded event log")
+    if header["schema"] not in SUPPORTED_SCHEMAS:
+        raise ValueError(
+            f"{source}: event log schema {header['schema']!r} not in "
+            f"supported {SUPPORTED_SCHEMAS}")
+    return header
+
+
+def read_header(path: Union[str, Path]) -> Dict[str, Any]:
+    """Parse only a recorded trace's header line (schema + run
+    metadata) without decoding any events — the cheap identity lookup
+    `repro.cloud.report trends` scans whole directories with."""
+    path = Path(path)
+    with path.open() as fh:
+        for line in fh:
+            if line.strip():
+                return _parse_header(line, str(path))
+    raise ValueError(f"{path}: empty event log")
+
+
+def iter_events(path: Union[str, Path]):
+    """Lazily decode a recorded trace's events in publish order (header
+    validated first). Corrupt or truncated lines raise a one-line
+    `ValueError` naming the source and line number instead of leaking
+    a raw `json` traceback."""
+    path = Path(path)
+    saw_header = False
+    with path.open() as fh:
+        for lineno, line in enumerate(fh, start=1):
+            if not line.strip():
+                continue
+            if not saw_header:
+                _parse_header(line, str(path))
+                saw_header = True
+                continue
+            yield _decode_line(line, lineno, str(path))
+    if not saw_header:
+        raise ValueError(f"{path}: empty event log")
+
+
+def _decode_line(line: str, lineno: int, source: str) -> Event:
+    try:
+        rec = json.loads(line)
+    except json.JSONDecodeError:
+        raise ValueError(
+            f"{source}: line {lineno} is not valid JSON — truncated "
+            f"or corrupt event log") from None
+    try:
+        return decode_event(rec)
+    except (TypeError, KeyError, ValueError) as e:
+        raise ValueError(f"{source}: line {lineno}: {e}") from None
+
+
+# ---------------------------------------------------------------------------
 # Replayer.
 # ---------------------------------------------------------------------------
 class EventReplayer:
@@ -206,23 +275,23 @@ class EventReplayer:
         self.events = events
 
     @classmethod
-    def loads(cls, text: str) -> "EventReplayer":
-        """Parse JSONL log text; rejects unsupported schema versions."""
-        lines = [ln for ln in text.splitlines() if ln.strip()]
-        if not lines:
-            raise ValueError("empty event log")
-        header = json.loads(lines[0])
-        if header.get("schema") not in SUPPORTED_SCHEMAS:
-            raise ValueError(
-                f"event log schema {header.get('schema')!r} not in "
-                f"supported {SUPPORTED_SCHEMAS}")
-        events = [decode_event(json.loads(ln)) for ln in lines[1:]]
+    def loads(cls, text: str,
+              source: str = "event log") -> "EventReplayer":
+        """Parse JSONL log text; rejects unsupported schema versions
+        and raises one-line, line-numbered `ValueError`s on corrupt
+        or truncated input."""
+        numbered = [(i, ln) for i, ln in enumerate(text.splitlines(),
+                                                  start=1) if ln.strip()]
+        if not numbered:
+            raise ValueError(f"{source}: empty event log")
+        header = _parse_header(numbered[0][1], source)
+        events = [_decode_line(ln, i, source) for i, ln in numbered[1:]]
         return cls(header, events)
 
     @classmethod
     def load(cls, path: Union[str, Path]) -> "EventReplayer":
-        """`loads` over a file on disk."""
-        return cls.loads(Path(path).read_text())
+        """`loads` over a file on disk (errors name the path)."""
+        return cls.loads(Path(path).read_text(), source=str(path))
 
     def replay(self, bus: EventBus) -> None:
         """Publish every recorded event onto `bus`, in recorded order."""

@@ -1,6 +1,10 @@
 """benchmarks/README.md must stay in sync with the scripts' `--help`
 output: every flag an argparse-driven benchmark advertises has to be
 documented, and every benchmark module has to have a section.
+
+docs/reporting.md gets the same treatment for the
+`python -m repro.cloud.report` CLI: every subcommand needs a section
+and every flag its `--help` advertises must appear backticked.
 """
 import contextlib
 import io
@@ -54,3 +58,47 @@ class TestEveryScriptMentioned:
         missing = [s for s in scripts if s not in README]
         assert not missing, (
             f"benchmarks/README.md is missing section(s) for: {missing}")
+
+
+# ---------------------------------------------------------------------------
+# The report CLI (`python -m repro.cloud.report`) vs docs/reporting.md.
+# ---------------------------------------------------------------------------
+REPORTING_MD = (REPO / "docs" / "reporting.md").read_text()
+REPORT_SUBCOMMANDS = ["summary", "trends", "reconcile", "validate"]
+
+
+def report_help(subcommand: str) -> str:
+    """Capture `python -m repro.cloud.report <sub> --help` in-process."""
+    from repro.cloud.report import main
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf), pytest.raises(SystemExit):
+        main([subcommand, "--help"])
+    return buf.getvalue()
+
+
+class TestReportCliDocumented:
+    @pytest.mark.parametrize("sub", REPORT_SUBCOMMANDS)
+    def test_subcommand_has_a_section(self, sub):
+        assert f"## {sub}" in REPORTING_MD, (
+            f"docs/reporting.md has no `## {sub}` section")
+
+    @pytest.mark.parametrize("sub", REPORT_SUBCOMMANDS)
+    def test_every_help_flag_appears_in_reporting_md(self, sub):
+        flags = set(_FLAG.findall(report_help(sub))) - {"--help"}
+        missing = sorted(f for f in flags
+                         if f"`{f}" not in REPORTING_MD)
+        assert not missing, (
+            f"docs/reporting.md does not document report {sub} "
+            f"flag(s): {missing}")
+
+    def test_top_level_help_names_every_subcommand(self):
+        from repro.cloud.report import main
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf), pytest.raises(SystemExit):
+            main(["--help"])
+        for sub in REPORT_SUBCOMMANDS:
+            assert sub in buf.getvalue()
+
+    def test_benchmarks_readme_points_at_the_cli(self):
+        assert "repro.cloud.report" in README
+        assert "docs/reporting.md" in README

@@ -32,6 +32,7 @@ PUBLIC_MODULES = [
     "src/repro/cloud/accounting.py",
     "src/repro/cloud/fleet.py",
     "src/repro/cloud/scenarios.py",
+    "src/repro/cloud/report.py",
     "src/repro/fl/fleet.py",
     "src/repro/sweep/__init__.py",
     "src/repro/sweep/spec.py",
@@ -57,7 +58,8 @@ DOC_COVERAGE_FLOOR = 0.9
 MARKDOWN_FILES = ["README.md", "benchmarks/README.md",
                   "docs/index.md", "docs/architecture.md",
                   "docs/events.md", "docs/markets.md",
-                  "docs/sweep.md", "docs/training.md"]
+                  "docs/sweep.md", "docs/training.md",
+                  "docs/reporting.md"]
 
 
 # ---------------------------------------------------------------------------

@@ -45,10 +45,16 @@ CLIENTS = (
     ClientProfile("fast", mean_epoch_s=150, jitter=0.0, n_samples=1),
 )
 POLICIES = ("fedcostaware", "spot", "fedcostaware_async")
-# every golden trace name that has a fresh-run factory (drift +
-# live-vs-replay coverage): the three single-provider policies plus the
-# cross-provider trace-market run
+# every per-object golden trace name that has a fresh-run factory
+# (drift + live-vs-replay coverage): the three single-provider policies
+# plus the cross-provider trace-market run
 TRACES = tuple(f"golden__{p}" for p in POLICIES) + ("golden__multicloud",)
+# the fleet-path golden (schema v7, FleetStepSummary aggregates with
+# client_cost_delta attribution): the only engine mode with no
+# per-instance events, exercised by its own replay/live-vs-replay
+# tests — archived version dirs (v1..v6) predate it
+FLEET_TRACE = "golden__fleet"
+ALL_TRACES = TRACES + (FLEET_TRACE,)
 
 # Pinned replayed CostAccountant totals for the 2x3 golden configs
 # (printed by `--regenerate`; update together with the fixtures). The
@@ -76,6 +82,15 @@ GOLDEN_TOTALS = {
         "per_client": {"slow": 0.28167149999999996,
                        "fast": 0.21007193480806924},
     },
+    "golden__fleet": {
+        "total": 1.6905134002340116,
+        "per_client": {"c0": 0.24349844176276375,
+                       "c1": 0.25958800309305985,
+                       "c2": 0.26872494406847347,
+                       "c3": 0.30663318688595503,
+                       "c4": 0.3068277344237595,
+                       "c5": 0.30524109},
+    },
 }
 
 
@@ -101,9 +116,28 @@ def make_multicloud_runner() -> FLCloudRunner:
         spot_rate_sigma=0.0, market=market), record=True)
 
 
+FLEET_CLIENTS = tuple(
+    ClientProfile(f"c{i}", mean_epoch_s=300.0 + 120.0 * i, jitter=0.0,
+                  n_samples=1)
+    for i in range(6))
+
+
+def make_fleet_runner() -> FLCloudRunner:
+    """6 clients x 3 rounds forced onto the vectorized fleet path
+    (`fleet=True` far below `fleet_threshold`): one `FleetStepSummary`
+    per round instead of per-instance events, deterministic under the
+    sigma-0 market."""
+    cfg = FLRunConfig(dataset="golden_fleet", clients=FLEET_CLIENTS,
+                      n_epochs=3, policy="fedcostaware", seed=0,
+                      fleet=True)
+    return FLCloudRunner(cfg, cloud_cfg=CLOUD, record=True)
+
+
 def runner_for(trace: str) -> FLCloudRunner:
     if trace == "golden__multicloud":
         return make_multicloud_runner()
+    if trace == FLEET_TRACE:
+        return make_fleet_runner()
     return make_runner(trace.split("__", 1)[1])
 
 
@@ -166,7 +200,7 @@ def assert_json_equal(got, want, where="$"):
 # The regression oracle: fresh run == checked-in golden log.
 # ---------------------------------------------------------------------------
 class TestGoldenDrift:
-    @pytest.mark.parametrize("trace", TRACES)
+    @pytest.mark.parametrize("trace", ALL_TRACES)
     def test_fresh_run_reproduces_golden_log(self, trace):
         header, records = load_golden(trace)
         r = runner_for(trace)
@@ -194,7 +228,7 @@ class TestGoldenDrift:
 # Replay consumers reproduce the live run from the golden bytes alone.
 # ---------------------------------------------------------------------------
 class TestGoldenReplay:
-    @pytest.mark.parametrize("trace", TRACES)
+    @pytest.mark.parametrize("trace", ALL_TRACES)
     def test_replayed_totals_match_pinned(self, trace):
         rep = replay_result(trace_path(trace))
         want = GOLDEN_TOTALS[trace]
@@ -236,6 +270,23 @@ class TestGoldenReplay:
             rep = replay_result(EventReplayer.loads(r.recorder.dumps()))
             assert rep.total_cost == pytest.approx(want, abs=1e-6), policy
 
+    def test_fleet_replay_matches_live_run(self):
+        """The fleet golden's aggregate stream alone rebuilds the live
+        run's dollars: totals, per-client attribution (summed
+        `client_cost_delta` folds) and makespan — participants /
+        timeline stay live-only by design (no per-instance events)."""
+        r = make_fleet_runner()
+        live = r.run()
+        rep = replay_result(EventReplayer.loads(r.recorder.dumps()))
+        assert rep.total_cost == pytest.approx(live.total_cost, abs=1e-9)
+        assert rep.has_client_costs
+        assert set(rep.per_client_cost) == set(live.per_client_cost)
+        for c in live.per_client_cost:
+            assert rep.per_client_cost[c] == pytest.approx(
+                live.per_client_cost[c], abs=1e-9)
+        assert rep.makespan_s == pytest.approx(live.makespan_s, abs=1e-9)
+        assert rep.rounds_completed == live.rounds_completed
+
     def test_schema_version_enforced(self):
         text = trace_path("golden__spot").read_text()
         lines = text.splitlines()
@@ -265,25 +316,61 @@ class TestGoldenReplay:
 
 
 # ---------------------------------------------------------------------------
-# v1 -> v2 compat: pre-redesign recordings (no provider field, schema 1)
-# must still replay to the same pinned dollars.
+# Cross-version compat matrix. Every archived golden under
+# tests/golden/v1..v6 plus the current (v7) mains must (a) load with
+# its recorded schema, (b) replay to the pinned dollars, and (c)
+# differ from the next version's archive by the header line alone —
+# every schema bump so far has been additive (v2 additionally stamped
+# the provider key onto instance snapshots, handled below). Growing to
+# schema v8 means archiving the v7 goldens under tests/golden/v7 and
+# appending one `SCHEMA_DIRS` row — not writing a new class.
 # ---------------------------------------------------------------------------
-class TestSchemaV1Compat:
-    V1_TRACES = tuple(f"golden__{p}" for p in POLICIES) + (FED_ISIC_TRACE,)
+SCHEMA_DIRS = {1: GOLDEN_V1_DIR, 2: GOLDEN_V2_DIR, 3: GOLDEN_V3_DIR,
+               4: GOLDEN_V4_DIR, 5: GOLDEN_V5_DIR, 6: GOLDEN_V6_DIR,
+               SCHEMA_VERSION: GOLDEN_DIR}
 
-    @pytest.mark.parametrize("name", V1_TRACES)
-    def test_v1_trace_loads(self, name):
-        rep = EventReplayer.load(GOLDEN_V1_DIR / f"{name}.events.jsonl")
-        assert rep.header["schema"] == 1
 
-    @pytest.mark.parametrize("policy", POLICIES)
-    def test_v1_replay_matches_pinned_totals(self, policy):
+def archived_traces(version: int) -> tuple:
+    """The trace set archived for a schema version: v1 predates the
+    multi-cloud market (no multicloud golden), and the fleet golden
+    exists only at the current version."""
+    base = (tuple(f"golden__{p}" for p in POLICIES) if version == 1
+            else TRACES)
+    extra = (FLEET_TRACE,) if version == SCHEMA_VERSION else ()
+    return base + (FED_ISIC_TRACE,) + extra
+
+
+LOAD_MATRIX = [(v, name) for v in SCHEMA_DIRS
+               for name in archived_traces(v)]
+TOTALS_MATRIX = [(v, name) for v in SCHEMA_DIRS
+                 for name in archived_traces(v) if name in GOLDEN_TOTALS]
+# adjacent-version equivalence pairs (older, trace): compared against
+# version older+1 over the traces archived at the older version
+PAIR_MATRIX = [(v, name) for v in SCHEMA_DIRS if v < SCHEMA_VERSION
+               for name in archived_traces(v) if name != FLEET_TRACE]
+
+
+class TestSchemaCompatMatrix:
+    @pytest.mark.parametrize("version,name", LOAD_MATRIX)
+    def test_trace_loads(self, version, name):
+        rep = EventReplayer.load(
+            SCHEMA_DIRS[version] / f"{name}.events.jsonl")
+        assert rep.header["schema"] == version
+
+    @pytest.mark.parametrize("version,trace", TOTALS_MATRIX)
+    def test_replay_matches_pinned_totals(self, version, trace):
         rep = replay_result(
-            GOLDEN_V1_DIR / f"golden__{policy}.events.jsonl")
-        want = GOLDEN_TOTALS[f"golden__{policy}"]
+            SCHEMA_DIRS[version] / f"{trace}.events.jsonl")
+        want = GOLDEN_TOTALS[trace]
         assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
         for c, v in want["per_client"].items():
             assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
+        # invariants that hold matrix-wide: every archived golden
+        # carries full per-client attribution (BillingTicks, or v7
+        # fleet summaries with client_cost_delta), and none predates
+        # comms pricing with a nonzero transfer spend
+        assert rep.has_client_costs
+        assert rep.comm_cost == 0.0
 
     def test_v1_instance_refs_get_default_provider(self):
         rep = EventReplayer.load(
@@ -292,218 +379,28 @@ class TestSchemaV1Compat:
                  if hasattr(ev, "instance")]
         assert insts and all(i.provider == "aws" for i in insts)
 
-    @pytest.mark.parametrize("policy", POLICIES)
-    def test_v1_and_v2_streams_are_equivalent(self, policy):
-        """Field-for-field: the archived v2 golden differs from its
-        v1 ancestor only by the schema bump and the provider key each
-        instance snapshot gained."""
-        h1, recs1 = load_golden(f"v1/golden__{policy}")
-        h2, recs2 = load_golden(f"v2/golden__{policy}")
-        assert h1["schema"] == 1 and h2["schema"] == 2
-        assert {k: v for k, v in h1.items() if k != "schema"} == \
-            {k: v for k, v in h2.items() if k != "schema"}
-        assert len(recs1) == len(recs2)
-        for r1, r2 in zip(recs1, recs2):
-            if "instance" in r2:
-                snap = dict(r2["instance"]["$instance"])
+    @pytest.mark.parametrize("older,name", PAIR_MATRIX)
+    def test_adjacent_streams_differ_by_header_only(self, older, name):
+        """Field-for-field: each archived golden differs from the next
+        version's copy only by the header's schema field — every bump
+        was additive. The v1 -> v2 pair additionally gained the
+        provider key on instance snapshots (asserted to be the
+        single-provider default)."""
+        newer = older + 1
+        h_old, recs_old = load_golden(f"v{older}/{name}")
+        new_rel = (name if newer == SCHEMA_VERSION
+                   else f"v{newer}/{name}")
+        h_new, recs_new = load_golden(new_rel)
+        assert h_old["schema"] == older and h_new["schema"] == newer
+        assert {k: v for k, v in h_old.items() if k != "schema"} == \
+            {k: v for k, v in h_new.items() if k != "schema"}
+        assert len(recs_old) == len(recs_new)
+        for r_old, r_new in zip(recs_old, recs_new):
+            if older == 1 and "instance" in r_new:
+                snap = dict(r_new["instance"]["$instance"])
                 assert snap.pop("provider") == "aws"
-                r2 = dict(r2, instance={"$instance": snap})
-            assert_json_equal(r2, r1)
-
-
-# ---------------------------------------------------------------------------
-# v2 -> v3 compat: the checkpoint-vocabulary bump is purely additive
-# (new event types only), so archived schema-2 recordings must replay
-# unchanged and differ from the regenerated v3 goldens by the header
-# alone.
-# ---------------------------------------------------------------------------
-class TestSchemaV2Compat:
-    V2_TRACES = TRACES + (FED_ISIC_TRACE,)
-
-    @pytest.mark.parametrize("name", V2_TRACES)
-    def test_v2_trace_loads(self, name):
-        rep = EventReplayer.load(GOLDEN_V2_DIR / f"{name}.events.jsonl")
-        assert rep.header["schema"] == 2
-
-    @pytest.mark.parametrize("trace", TRACES)
-    def test_v2_replay_matches_pinned_totals(self, trace):
-        rep = replay_result(GOLDEN_V2_DIR / f"{trace}.events.jsonl")
-        want = GOLDEN_TOTALS[trace]
-        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
-        for c, v in want["per_client"].items():
-            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
-
-    @pytest.mark.parametrize("name", V2_TRACES)
-    def test_v2_and_v3_streams_are_equivalent(self, name):
-        """The default path publishes none of the new v3 events, so the
-        archived v3 goldens carry identical event bodies — only the
-        header's schema field moved."""
-        h2, recs2 = load_golden(f"v2/{name}")
-        h3, recs3 = load_golden(f"v3/{name}")
-        assert h2["schema"] == 2 and h3["schema"] == 3
-        assert {k: v for k, v in h2.items() if k != "schema"} == \
-            {k: v for k, v in h3.items() if k != "schema"}
-        assert len(recs2) == len(recs3)
-        for r2, r3 in zip(recs2, recs3):
-            assert_json_equal(r3, r2)
-
-
-# ---------------------------------------------------------------------------
-# v3 -> v4 compat: the strategy-API bump is purely additive (new event
-# types + an optional ClientCheckpointed field), so archived schema-3
-# recordings must replay unchanged and differ from the regenerated v4
-# goldens by the header alone — the acceptance proof that the strategy
-# redesign moved zero events.
-# ---------------------------------------------------------------------------
-class TestSchemaV3Compat:
-    V3_TRACES = TRACES + (FED_ISIC_TRACE,)
-
-    @pytest.mark.parametrize("name", V3_TRACES)
-    def test_v3_trace_loads(self, name):
-        rep = EventReplayer.load(GOLDEN_V3_DIR / f"{name}.events.jsonl")
-        assert rep.header["schema"] == 3
-
-    @pytest.mark.parametrize("trace", TRACES)
-    def test_v3_replay_matches_pinned_totals(self, trace):
-        rep = replay_result(GOLDEN_V3_DIR / f"{trace}.events.jsonl")
-        want = GOLDEN_TOTALS[trace]
-        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
-        for c, v in want["per_client"].items():
-            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
-
-    @pytest.mark.parametrize("name", V3_TRACES)
-    def test_v3_and_v4_streams_are_equivalent(self, name):
-        """Under the composable strategy API the four Table-I policies
-        publish the exact pre-redesign event bodies — only the
-        header's schema field moved."""
-        h3, recs3 = load_golden(f"v3/{name}")
-        h4, recs4 = load_golden(f"v4/{name}")
-        assert h3["schema"] == 3 and h4["schema"] == 4
-        assert {k: v for k, v in h3.items() if k != "schema"} == \
-            {k: v for k, v in h4.items() if k != "schema"}
-        assert len(recs3) == len(recs4)
-        for r3, r4 in zip(recs3, recs4):
-            assert_json_equal(r4, r3)
-
-
-# ---------------------------------------------------------------------------
-# v4 -> v5 compat: the fleet-core bump is purely additive (one new
-# aggregate event type, FleetStepSummary, published only by the
-# vectorized fleet path), so archived schema-4 recordings must replay
-# unchanged and differ from the regenerated v5 goldens by the header
-# alone — the acceptance proof that runs below
-# `CloudConfig.fleet_threshold` moved zero events.
-# ---------------------------------------------------------------------------
-class TestSchemaV4Compat:
-    V4_TRACES = TRACES + (FED_ISIC_TRACE,)
-
-    @pytest.mark.parametrize("name", V4_TRACES)
-    def test_v4_trace_loads(self, name):
-        rep = EventReplayer.load(GOLDEN_V4_DIR / f"{name}.events.jsonl")
-        assert rep.header["schema"] == 4
-
-    @pytest.mark.parametrize("trace", TRACES)
-    def test_v4_replay_matches_pinned_totals(self, trace):
-        rep = replay_result(GOLDEN_V4_DIR / f"{trace}.events.jsonl")
-        want = GOLDEN_TOTALS[trace]
-        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
-        for c, v in want["per_client"].items():
-            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
-
-    @pytest.mark.parametrize("name", V4_TRACES)
-    def test_v4_and_v5_streams_are_equivalent(self, name):
-        """Per-object runs publish no fleet summaries, so the four
-        Table-I policies carry the exact pre-fleet event bodies — only
-        the header's schema field moved."""
-        h4, recs4 = load_golden(f"v4/{name}")
-        h5, recs5 = load_golden(f"v5/{name}")
-        assert h4["schema"] == 4 and h5["schema"] == 5
-        assert {k: v for k, v in h4.items() if k != "schema"} == \
-            {k: v for k, v in h5.items() if k != "schema"}
-        assert len(recs4) == len(recs5)
-        for r4, r5 in zip(recs4, recs5):
-            assert_json_equal(r5, r4)
-
-
-# ---------------------------------------------------------------------------
-# v5 -> v6 compat: the per-client fleet-attribution bump is purely
-# additive (one optional FleetStepSummary field, published only by the
-# fleet path), so archived schema-5 recordings must replay unchanged
-# and differ from the regenerated v6 goldens by the header alone.
-# ---------------------------------------------------------------------------
-class TestSchemaV5Compat:
-    V5_TRACES = TRACES + (FED_ISIC_TRACE,)
-
-    @pytest.mark.parametrize("name", V5_TRACES)
-    def test_v5_trace_loads(self, name):
-        rep = EventReplayer.load(GOLDEN_V5_DIR / f"{name}.events.jsonl")
-        assert rep.header["schema"] == 5
-
-    @pytest.mark.parametrize("trace", TRACES)
-    def test_v5_replay_matches_pinned_totals(self, trace):
-        rep = replay_result(GOLDEN_V5_DIR / f"{trace}.events.jsonl")
-        want = GOLDEN_TOTALS[trace]
-        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
-        for c, v in want["per_client"].items():
-            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
-        # per-object traces carry full BillingTick attribution, so even
-        # a v5 log's per-client breakdown is complete
-        assert rep.has_client_costs
-
-    @pytest.mark.parametrize("name", V5_TRACES)
-    def test_v5_and_v6_streams_are_equivalent(self, name):
-        """Per-object runs publish no fleet summaries, so the goldens
-        carry identical event bodies across the attribution bump — only
-        the header's schema field moved."""
-        h5, recs5 = load_golden(f"v5/{name}")
-        h6, recs6 = load_golden(f"v6/{name}")
-        assert h5["schema"] == 5 and h6["schema"] == 6
-        assert {k: v for k, v in h5.items() if k != "schema"} == \
-            {k: v for k, v in h6.items() if k != "schema"}
-        assert len(recs5) == len(recs6)
-        for r5, r6 in zip(recs5, recs6):
-            assert_json_equal(r6, r5)
-
-
-# ---------------------------------------------------------------------------
-# v6 -> v7 compat: the comms bump is purely additive (ClientUpdateSent +
-# TransferBilled, published only when a run enables comms modeling via
-# `FLRunConfig.update_payload_mb` or payload-exposing trainer hooks), so
-# archived schema-6 recordings must replay unchanged and differ from the
-# regenerated v7 goldens by the header alone — the acceptance proof that
-# zero-default transfer rates moved zero events.
-# ---------------------------------------------------------------------------
-class TestSchemaV6Compat:
-    V6_TRACES = TRACES + (FED_ISIC_TRACE,)
-
-    @pytest.mark.parametrize("name", V6_TRACES)
-    def test_v6_trace_loads(self, name):
-        rep = EventReplayer.load(GOLDEN_V6_DIR / f"{name}.events.jsonl")
-        assert rep.header["schema"] == 6
-
-    @pytest.mark.parametrize("trace", TRACES)
-    def test_v6_replay_matches_pinned_totals(self, trace):
-        rep = replay_result(GOLDEN_V6_DIR / f"{trace}.events.jsonl")
-        want = GOLDEN_TOTALS[trace]
-        assert rep.total_cost == pytest.approx(want["total"], abs=1e-9)
-        for c, v in want["per_client"].items():
-            assert rep.per_client_cost[c] == pytest.approx(v, abs=1e-9)
-        # pre-comms logs naturally carry no transfer spend
-        assert rep.comm_cost == 0.0
-
-    @pytest.mark.parametrize("name", V6_TRACES)
-    def test_v6_and_v7_streams_are_equivalent(self, name):
-        """Comms-free runs publish no upload/transfer events, so the
-        goldens carry identical event bodies across the comms bump —
-        only the header's schema field moved."""
-        h6, recs6 = load_golden(f"v6/{name}")
-        h7, recs7 = load_golden(name)
-        assert h6["schema"] == 6 and h7["schema"] == 7
-        assert {k: v for k, v in h6.items() if k != "schema"} == \
-            {k: v for k, v in h7.items() if k != "schema"}
-        assert len(recs6) == len(recs7)
-        for r6, r7 in zip(recs6, recs7):
-            assert_json_equal(r7, r6)
+                r_new = dict(r_new, instance={"$instance": snap})
+            assert_json_equal(r_new, r_old)
 
 
 # ---------------------------------------------------------------------------
@@ -514,7 +411,7 @@ def regenerate():
     # (a mid-way crash must not leave the goldens half-regenerated)
     totals = {}
     recorders = {}
-    for trace in TRACES:
+    for trace in ALL_TRACES:
         r = runner_for(trace)
         res = r.run()
         recorders[trace] = r.recorder

@@ -297,3 +297,60 @@ def test_pytree_quant_payload_accounting_exact(seed):
         amax = float(jnp.max(jnp.abs(leaf)))
         assert float(jnp.max(jnp.abs(y - leaf))) <= amax / 127.0 + 1e-6
     assert UpdatePayload.from_tree(tree, quantized=True).num_bytes == total
+
+
+# ---------------------------------------------------------------------------
+# Cost-report audit: any recorded run summarizes to the replayed
+# dollars and reconciles exactly (tests/test_report.py pins the golden
+# traces; this sweeps random configs through the same invariant).
+# ---------------------------------------------------------------------------
+@given(
+    st.lists(st.floats(120.0, 1500.0), min_size=2, max_size=4),
+    st.sampled_from(["fedcostaware", "spot", "on_demand",
+                     "fedcostaware_async"]),
+    st.integers(0, 2**16),
+    st.integers(2, 4),
+    st.one_of(st.none(), st.floats(1.0, 16.0)),
+)
+@settings(max_examples=10, deadline=None)
+def test_cost_report_audits_any_recorded_run(epoch_times, policy, seed,
+                                             n_epochs, payload_mb):
+    """For arbitrary (clients, policy, seed, rounds, comms payload):
+    the report CLI's summary category totals and per-client rows equal
+    the live `RunResult` dollars to 1e-9, and `reconcile` passes."""
+    import tempfile
+    from pathlib import Path
+
+    from repro.cloud.report import reconcile_path, summarize_path
+    from repro.common.config import MarketConfig, ProviderConfig
+
+    clients = tuple(
+        ClientProfile(f"c{i}", t, jitter=0.1, cold_multiplier=1.1)
+        for i, t in enumerate(epoch_times))
+    market = MarketConfig(providers=(ProviderConfig(
+        name="aws", update_egress_usd_per_mb=0.001,
+        uplink_mbps=100.0),))
+    cfg = FLRunConfig(dataset="prop_report", clients=clients,
+                      n_epochs=n_epochs, policy=policy, seed=seed,
+                      update_payload_mb=payload_mb)
+    runner = FLCloudRunner(cfg, cloud_cfg=CloudConfig(market=market),
+                           record=True)
+    res = runner.run()
+    with tempfile.TemporaryDirectory() as d:
+        path = Path(d) / "run.events.jsonl"
+        runner.recorder.dump(path)
+        s = summarize_path(path)
+        rec = reconcile_path(path)
+    t = s["totals"]
+    assert t["total"] == pytest.approx(res.total_cost, abs=1e-9)
+    assert t["checkpoint"] == pytest.approx(res.checkpoint_cost,
+                                            abs=1e-9)
+    assert t["egress"] == pytest.approx(res.comm_cost, abs=1e-9)
+    if payload_mb is not None:
+        assert t["egress"] > 0.0
+    assert set(s["per_client"]) == set(res.per_client_cost)
+    for c, row in s["per_client"].items():
+        assert row["total"] == pytest.approx(res.per_client_cost[c],
+                                             abs=1e-9)
+    assert rec.ok, rec.first_divergence
+    assert abs(rec.delta) <= 1e-9

@@ -1,0 +1,630 @@
+"""Dollar-exact audit harness for the cost reporting CLI
+(`python -m repro.cloud.report`, src/repro/cloud/report.py).
+
+Four pillars, mirroring the subcommands:
+
+  * summary   — every category breakdown (per-client / per-provider /
+                per-zone, compute / checkpoint / egress) must sum back
+                to the independently replayed
+                `RunResult.{total,checkpoint,comm}_cost` to 1e-9 on
+                all six golden traces plus freshly recorded
+                comms-billed and checkpoint-billed runs;
+  * reconcile — passes on every golden; a tampered
+                `RunCompleted.total_cost` or fleet
+                `client_cost_delta` fails with nonzero exit naming
+                the *first divergent event*;
+  * validate  — refuses an over-budget launch with the pinned
+                `estimated $X.XX exceeds budget $Y.YY` line and names
+                the cheapest feasible zone;
+  * corrupt inputs — truncated JSONL, bad headers and unknown future
+                schemas exit the CLI (and the fig4/fig5 --replay
+                paths) with a one-line error, never a raw traceback.
+
+Every rendered output is byte-deterministic: each mode is run twice
+and compared byte-for-byte, the same check CI performs with diff.
+"""
+import contextlib
+import io
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.cloud import report
+from repro.cloud.report import (RECONCILE_TOL, reconcile_path,
+                                render_summary, screen_budget,
+                                summarize_path, trend_rows)
+from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
+                                 MarketConfig, ProviderConfig,
+                                 SchedulerConfig)
+from repro.core.eventlog import EventReplayer, iter_events, read_header
+from repro.fl.runner import FLCloudRunner
+from repro.fl.telemetry import replay_result, state_totals
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+GOLDEN_TRACES = sorted(GOLDEN_DIR.glob("*.events.jsonl"))
+GOLDEN_IDS = [p.stem.replace(".events", "") for p in GOLDEN_TRACES]
+FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
+
+assert len(GOLDEN_TRACES) == 6, "expected 6 golden traces (incl. fleet)"
+
+
+def run_cli(argv):
+    """Invoke the report CLI in-process; (exit code, stdout, stderr)."""
+    out, err = io.StringIO(), io.StringIO()
+    with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+        rc = report.main(argv)
+    return rc, out.getvalue(), err.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# summary vs the independently replayed RunResult.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("trace", GOLDEN_TRACES, ids=GOLDEN_IDS)
+class TestSummaryAgainstReplay:
+    def test_category_totals_match_replay(self, trace):
+        """summary's category totals are the replayed run's dollars:
+        total/checkpoint/egress pin to RunResult to 1e-9."""
+        s = summarize_path(trace)
+        rep = replay_result(trace)
+        t = s["totals"]
+        assert t["total"] == pytest.approx(rep.total_cost, abs=1e-9)
+        assert t["checkpoint"] == pytest.approx(rep.checkpoint_cost,
+                                                abs=1e-9)
+        assert t["egress"] == pytest.approx(rep.comm_cost, abs=1e-9)
+        assert t["makespan_s"] == pytest.approx(rep.makespan_s, abs=1e-9)
+        assert t["rounds"] == rep.rounds_completed
+
+    def test_per_client_rows_match_replay(self, trace):
+        """Each client's compute+checkpoint+egress row equals its
+        replayed per_client_cost entry (goldens all attribute)."""
+        s = summarize_path(trace)
+        rep = replay_result(trace)
+        assert rep.has_client_costs
+        assert set(s["per_client"]) == set(rep.per_client_cost)
+        for c, row in s["per_client"].items():
+            assert row["total"] == pytest.approx(
+                rep.per_client_cost[c], abs=1e-9)
+            assert row["total"] == pytest.approx(
+                row["compute"] + row["checkpoint"] + row["egress"],
+                abs=1e-12)
+
+    def test_provider_and_zone_columns_sum_to_totals(self, trace):
+        """Provider and zone breakdowns are complete partitions of the
+        category totals (fleet by_zone dollars equal the attributed
+        per-client dollars, so compute covers both)."""
+        s = summarize_path(trace)
+        t = s["totals"]
+        attributed = t["compute"] + t["fleet_unattributed"]
+        prov = s["per_provider"].values()
+        assert sum(p["compute"] for p in prov) == pytest.approx(
+            attributed, abs=1e-9)
+        assert sum(p["checkpoint"] for p in prov) == pytest.approx(
+            t["checkpoint"], abs=1e-9)
+        assert sum(p["egress"] for p in prov) == pytest.approx(
+            t["egress"], abs=1e-9)
+        zones = s["per_zone"].values()
+        assert sum(z["compute"] for z in zones) == pytest.approx(
+            attributed, abs=1e-9)
+        assert sum(z["egress"] for z in zones) == pytest.approx(
+            t["egress"], abs=1e-9)
+
+    def test_idle_seconds_match_replayed_timeline(self, trace):
+        """Idle columns fold from the same ClientStateChanged stream
+        the replayed Fig-4 timeline is built from."""
+        s = summarize_path(trace)
+        rep = replay_result(trace)
+        totals = state_totals(rep.timeline)
+        for c, row in s["per_client"].items():
+            assert row["idle_s"] == pytest.approx(
+                totals.get((c, "idle"), 0.0), abs=1e-9)
+
+
+class TestSummaryShape:
+    def test_fleet_attribution_lands_per_client(self):
+        """The fleet trace's FleetStepSummary client_cost_delta maps
+        fully onto per-client compute: nothing left unattributed."""
+        s = summarize_path(GOLDEN_DIR / "golden__fleet.events.jsonl")
+        assert s["totals"]["fleet_unattributed"] == 0.0
+        assert len(s["per_client"]) == 6
+        assert all(row["compute"] > 0 for row in s["per_client"].values())
+
+    def test_multicloud_attributes_to_the_winning_provider(self):
+        """The cross-provider golden's spend lands on provider-prefixed
+        zones of the trace market (the scheduler picks gcp, the cheaper
+        book, for every placement in this fixture)."""
+        s = summarize_path(GOLDEN_DIR / "golden__multicloud.events.jsonl")
+        assert set(s["per_provider"]) <= {"aws", "gcp"}
+        assert "gcp" in s["per_provider"]
+        assert all(p["compute"] > 0
+                   for p in s["per_provider"].values())
+        assert all(z.split("/", 1)[0] in {"aws", "gcp"}
+                   for z in s["per_zone"])
+
+    def test_render_summary_has_all_blocks(self):
+        s = summarize_path(GOLDEN_DIR / "golden__spot.events.jsonl")
+        text = render_summary(s)
+        assert "client,compute_usd,checkpoint_usd,egress_usd" in text
+        assert "provider,compute_usd,checkpoint_usd,egress_usd" in text
+        assert "zone,compute_usd,egress_usd" in text
+        # header names the run identity
+        assert "policy=spot" in text
+
+
+# ---------------------------------------------------------------------------
+# Freshly recorded runs that actually spend checkpoint / egress dollars
+# (the goldens keep those categories at zero).
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def comm_trace(tmp_path_factory):
+    """A comms-billed recording: 8 MB updates at $0.001/MB egress."""
+    market = MarketConfig(providers=(
+        ProviderConfig(name="aws", on_demand_rate=1.0,
+                       spot_rate_mean=0.4, spot_rate_sigma=0.0,
+                       n_zones=2, update_egress_usd_per_mb=0.001,
+                       uplink_mbps=100.0),))
+    cfg = FLRunConfig(
+        dataset="report_comm",
+        clients=(ClientProfile("slow", mean_epoch_s=900, jitter=0.0,
+                               n_samples=2),
+                 ClientProfile("fast", mean_epoch_s=150, jitter=0.0,
+                               n_samples=1)),
+        n_epochs=3, policy="fedcostaware", seed=0,
+        update_payload_mb=8.0)
+    r = FLCloudRunner(cfg, cloud_cfg=CloudConfig(
+        spot_rate_sigma=0.0, market=market), record=True)
+    res = r.run()
+    path = tmp_path_factory.mktemp("comm") / "report_comm.events.jsonl"
+    r.recorder.dump(path)
+    return path, res
+
+
+@pytest.fixture(scope="module")
+def ckpt_trace(tmp_path_factory):
+    """A checkpoint-billed recording: replayed real interruptions with
+    a 120 s notice window and non-zero S3 storage rates."""
+    market = MarketConfig(providers=(ProviderConfig(
+        name="aws", price_trace=str(FIXTURE_PRICES / "aws.csv"),
+        interruption_trace=str(FIXTURE_PRICES / "aws.interruptions.csv"),
+        preemption_notice_s=120.0, storage_put_usd=0.000005,
+        storage_egress_usd_per_mb=0.00009),))
+    cfg = FLRunConfig(
+        dataset="report_ckpt",
+        clients=(ClientProfile("a", mean_epoch_s=600.0, jitter=0.0,
+                               n_samples=1, zone="us-east-1a"),
+                 ClientProfile("b", mean_epoch_s=400.0, jitter=0.0,
+                               n_samples=1, zone="us-east-1b")),
+        n_epochs=3, policy="spot", seed=0, on_warning="checkpoint")
+    r = FLCloudRunner(
+        cfg,
+        cloud_cfg=CloudConfig(spot_rate_sigma=0.0, spin_up_sigma=0.0,
+                              preemption_model="replay", market=market),
+        sched_cfg=SchedulerConfig(checkpoint_every_s=600.0,
+                                  warning_ckpt_write_s=10.0,
+                                  warning_ckpt_size_mb=100.0),
+        record=True)
+    res = r.run()
+    path = tmp_path_factory.mktemp("ckpt") / "report_ckpt.events.jsonl"
+    r.recorder.dump(path)
+    return path, res
+
+
+class TestBilledCategories:
+    def test_egress_dollars_attributed(self, comm_trace):
+        path, res = comm_trace
+        assert res.comm_cost > 0, "scenario must bill update egress"
+        s = summarize_path(path)
+        assert s["totals"]["egress"] == pytest.approx(res.comm_cost,
+                                                      abs=1e-9)
+        assert s["totals"]["total"] == pytest.approx(res.total_cost,
+                                                     abs=1e-9)
+        for c, row in s["per_client"].items():
+            assert row["egress"] > 0
+            assert row["total"] == pytest.approx(
+                res.per_client_cost[c], abs=1e-9)
+        # egress carries zone attribution from ClientUpdateSent
+        assert sum(z["egress"] for z in s["per_zone"].values()) == \
+            pytest.approx(res.comm_cost, abs=1e-9)
+
+    def test_checkpoint_dollars_attributed(self, comm_trace, ckpt_trace):
+        path, res = ckpt_trace
+        assert res.checkpoint_cost > 0, "scenario must bill checkpoints"
+        s = summarize_path(path)
+        assert s["totals"]["checkpoint"] == pytest.approx(
+            res.checkpoint_cost, abs=1e-9)
+        assert s["totals"]["total"] == pytest.approx(res.total_cost,
+                                                     abs=1e-9)
+        assert s["per_provider"]["aws"]["checkpoint"] == pytest.approx(
+            res.checkpoint_cost, abs=1e-9)
+        assert s["totals"]["preemptions"] > 0
+
+    def test_billed_traces_reconcile(self, comm_trace, ckpt_trace):
+        for path, _ in (comm_trace, ckpt_trace):
+            rec = reconcile_path(path)
+            assert rec.ok, rec.first_divergence
+            assert abs(rec.delta) <= RECONCILE_TOL
+
+
+# ---------------------------------------------------------------------------
+# reconcile — the audit primitive.
+# ---------------------------------------------------------------------------
+class TestReconcile:
+    @pytest.mark.parametrize("trace", GOLDEN_TRACES, ids=GOLDEN_IDS)
+    def test_golden_reconciles(self, trace):
+        rec = reconcile_path(trace)
+        assert rec.ok, rec.first_divergence
+        assert rec.first_divergence is None
+        assert abs(rec.delta) <= RECONCILE_TOL
+        assert rec.total == pytest.approx(sum(rec.parts.values()),
+                                          abs=RECONCILE_TOL)
+
+    def test_cli_passes_all_goldens(self):
+        rc, out, _ = run_cli(["reconcile"]
+                             + [str(p) for p in GOLDEN_TRACES])
+        assert rc == 0
+        assert out.count("PASS") == len(GOLDEN_TRACES)
+        assert "FAIL" not in out
+
+    @staticmethod
+    def _tamper(trace, tmp_path, ev_type, mutate):
+        """Copy a golden, mutating the first `ev_type` record."""
+        lines = Path(trace).read_text().splitlines()
+        for i, ln in enumerate(lines[1:], start=1):
+            rec = json.loads(ln)
+            if rec.get("type") == ev_type and mutate(rec):
+                lines[i] = json.dumps(rec)
+                break
+        else:
+            raise AssertionError(f"no mutable {ev_type} in {trace}")
+        bad = tmp_path / Path(trace).name
+        bad.write_text("\n".join(lines) + "\n")
+        return bad
+
+    def test_tampered_run_total_names_divergent_event(self, tmp_path):
+        """Inflating RunCompleted.total_cost fails the audit *at that
+        event*, with the recorded-vs-replayed dollars in the message."""
+        def mutate(rec):
+            rec["total_cost"] += 0.5
+            return True
+
+        bad = self._tamper(GOLDEN_DIR / "golden__spot.events.jsonl",
+                           tmp_path, "RunCompleted", mutate)
+        rec = reconcile_path(bad)
+        assert not rec.ok
+        assert "RunCompleted" in rec.first_divergence
+        assert "recorded total" in rec.first_divergence
+        rc, out, _ = run_cli(["reconcile", str(bad)])
+        assert rc == 1
+        assert "FAIL" in out and "first divergent" in out
+
+    def test_tampered_fleet_attribution_names_divergent_event(
+            self, tmp_path):
+        """Skimming $0.25 into one fleet client's attribution (without
+        touching the step total) breaks the category-sum invariant at
+        that exact FleetStepSummary. (Zero-dollar steps carry an empty
+        attribution map — skip to the first settled one.)"""
+        def mutate(rec):
+            if not rec["client_cost_delta"]:
+                return False
+            c = sorted(rec["client_cost_delta"])[0]
+            rec["client_cost_delta"][c] += 0.25
+            return True
+
+        bad = self._tamper(GOLDEN_DIR / "golden__fleet.events.jsonl",
+                           tmp_path, "FleetStepSummary", mutate)
+        rec = reconcile_path(bad)
+        assert not rec.ok
+        assert "FleetStepSummary" in rec.first_divergence
+        assert re.search(r"event\[\d+\]", rec.first_divergence)
+        assert abs(rec.delta) == pytest.approx(0.25, abs=1e-9)
+        rc, out, _ = run_cli(["reconcile", str(bad)])
+        assert rc == 1
+        assert "FleetStepSummary" in out
+
+    def test_tol_flag_widens_the_gate(self, tmp_path):
+        def mutate(rec):
+            rec["total_cost"] += 1e-6
+            return True
+
+        bad = self._tamper(GOLDEN_DIR / "golden__spot.events.jsonl",
+                           tmp_path, "RunCompleted", mutate)
+        assert run_cli(["reconcile", str(bad)])[0] == 1
+        assert run_cli(["reconcile", "--tol", "1e-3", str(bad)])[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# trends — directory trajectories.
+# ---------------------------------------------------------------------------
+class TestTrends:
+    def test_rows_cover_directory_sorted(self):
+        rows = trend_rows(GOLDEN_DIR)
+        assert [r["trace"] for r in rows] == \
+            [p.name for p in GOLDEN_TRACES]
+        for r, p in zip(rows, GOLDEN_TRACES):
+            s = summarize_path(p)
+            assert r["total_usd"] == s["totals"]["total"]
+            assert r["policy"] == s["policy"]
+
+    def test_empty_directory_is_an_error(self, tmp_path):
+        with pytest.raises(ValueError, match="no .*traces"):
+            trend_rows(tmp_path)
+        rc, _, err = run_cli(["trends", str(tmp_path)])
+        assert rc == 2
+        assert err.startswith("error:")
+
+    def test_json_mode_parses(self):
+        rc, out, _ = run_cli(["trends", "--json", str(GOLDEN_DIR)])
+        assert rc == 0
+        rows = json.loads(out)
+        assert len(rows) == len(GOLDEN_TRACES)
+
+
+# ---------------------------------------------------------------------------
+# Byte-determinism: two runs, identical bytes (the CI diff check).
+# ---------------------------------------------------------------------------
+class TestByteDeterminism:
+    @pytest.mark.parametrize("argv", [
+        ["summary"] + [str(p) for p in GOLDEN_TRACES],
+        ["summary", "--json"] + [str(p) for p in GOLDEN_TRACES],
+        ["trends", str(GOLDEN_DIR)],
+        ["trends", "--json", str(GOLDEN_DIR)],
+        ["reconcile"] + [str(p) for p in GOLDEN_TRACES],
+    ], ids=["summary", "summary-json", "trends", "trends-json",
+            "reconcile"])
+    def test_output_is_byte_identical_across_runs(self, argv):
+        rc1, out1, _ = run_cli(argv)
+        rc2, out2, _ = run_cli(argv)
+        assert rc1 == rc2 == 0
+        assert out1 == out2
+        assert out1.strip()
+
+    def test_json_keys_sorted(self):
+        _, out, _ = run_cli(
+            ["summary", "--json",
+             str(GOLDEN_DIR / "golden__spot.events.jsonl")])
+        payload = json.loads(out)[0]
+        assert out == json.dumps(json.loads(out), sort_keys=True,
+                                 indent=2) + "\n"
+        assert list(payload["per_client"]) == \
+            sorted(payload["per_client"])
+
+
+# ---------------------------------------------------------------------------
+# validate — pre-launch budget screening.
+# ---------------------------------------------------------------------------
+class TestValidate:
+    REFUSAL = re.compile(r"^error: estimated \$\d+\.\d{2} exceeds "
+                         r"budget \$\d+\.\d{2}$", re.M)
+
+    def test_over_budget_on_demand_is_refused(self):
+        """On-demand Fed-ISIC-sized launch against a $5 budget: refuse
+        with the pinned message and suggest the spot zone that fits."""
+        rc, out, _ = run_cli(
+            ["validate", "--budget", "5.00", "--epoch-s", "1200",
+             "--epochs", "20", "--on-demand"])
+        assert rc == 1
+        assert self.REFUSAL.search(out), out
+        assert "exceeds budget $5.00" in out
+        assert re.search(r"# cheapest zone: aws/\S+ spot @", out)
+        assert "fits budget $5.00" in out
+
+    def test_within_budget_passes_with_headroom(self):
+        rc, out, _ = run_cli(
+            ["validate", "--budget", "10.00", "--epoch-s", "1200",
+             "--epochs", "20"])
+        assert rc == 0
+        assert "within budget $10.00" in out
+        assert "headroom" in out
+
+    def test_estimate_matches_screen_budget_math(self):
+        """The CLI's dollars are screen_budget's dollars: spot rate x
+        busy hours, spin-up included."""
+        from repro.cloud.pricing import SpotMarket
+        market = SpotMarket.for_cloud_config(
+            CloudConfig(spot_rate_mean=0.3951 / 0.98,
+                        spot_rate_sigma=0.0), seed=0)
+        chk = screen_budget([1200.0], 20, 10.0, market)
+        hours = (20 * 1200.0 + 150.0) / 3600.0
+        _, rate = market.cheapest_zone(0.0)
+        assert chk.estimate == pytest.approx(hours * rate, abs=1e-9)
+        assert chk.ok
+        rc, out, _ = run_cli(
+            ["validate", "--budget", "10.00", "--epoch-s", "1200",
+             "--epochs", "20"])
+        assert f"${chk.estimate:.2f}" in out
+
+    def test_multi_client_epoch_list(self):
+        """Per-client epoch seconds: 6 Fed-ISIC clients at 20 epochs on
+        demand blow a $4 budget; even the cheapest spot zone can't
+        save it at that price."""
+        rc, out, _ = run_cli(
+            ["validate", "--budget", "4.00",
+             "--epoch-s", "718,523,390,246,195,133",
+             "--epochs", "20", "--on-demand"])
+        assert rc == 1
+        assert "6 clients" in out
+        assert "still exceeds budget $4.00" in out
+
+    def test_roofline_derived_epoch_time(self):
+        """FLOP/byte counts feed launch.roofline: the estimate scales
+        with steps-per-epoch and client count."""
+        base = ["validate", "--budget", "1000", "--roofline-flops",
+                "1e15", "--roofline-bytes", "1e12"]
+        rc, out, _ = run_cli(base + ["--clients", "2"])
+        assert rc == 0
+        assert "2 clients" in out
+        rc1, out1, _ = run_cli(base + ["--clients", "2",
+                                       "--steps-per-epoch", "200"])
+        assert rc1 == 0
+        est = float(re.search(r"estimated \$(\d+\.\d{2})", out).group(1))
+        est2 = float(re.search(r"estimated \$(\d+\.\d{2})",
+                               out1).group(1))
+        assert est2 > est
+
+    @pytest.mark.parametrize("argv, msg", [
+        (["validate", "--budget", "5"], "exactly one of"),
+        (["validate", "--budget", "5", "--epoch-s", "100",
+          "--roofline-flops", "1e12"], "exactly one of"),
+        (["validate", "--budget", "5", "--roofline-flops", "1e12"],
+         "requires --roofline-bytes"),
+    ], ids=["neither", "both", "flops-without-bytes"])
+    def test_usage_errors_exit_2(self, argv, msg):
+        rc, _, err = run_cli(argv)
+        assert rc == 2
+        assert err.startswith("error:")
+        assert msg in err
+
+
+# ---------------------------------------------------------------------------
+# Corrupt / truncated / future-schema inputs: one-line error, nonzero
+# exit — from the CLI and from every replay-consuming entry point.
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def corrupt(tmp_path):
+    """Factory writing broken variants of the spot golden."""
+    good = (GOLDEN_DIR / "golden__spot.events.jsonl").read_text()
+
+    def make(kind):
+        path = tmp_path / f"{kind}.events.jsonl"
+        lines = good.splitlines()
+        if kind == "truncated":
+            lines[-1] = lines[-1][: len(lines[-1]) // 2]
+            path.write_text("\n".join(lines))
+        elif kind == "bad_header":
+            path.write_text("{not json\n" + "\n".join(lines[1:]))
+        elif kind == "schema_v99":
+            header = json.loads(lines[0])
+            header["schema"] = 99
+            path.write_text("\n".join([json.dumps(header)] + lines[1:]))
+        elif kind == "no_summary":
+            kept = [ln for ln in lines
+                    if '"type": "RunCompleted"' not in ln
+                    and '"type":"RunCompleted"' not in ln]
+            assert len(kept) < len(lines)
+            path.write_text("\n".join(kept))
+        elif kind == "empty":
+            path.write_text("")
+        else:
+            raise AssertionError(kind)
+        return path
+
+    return make
+
+
+class TestCorruptInputs:
+    @pytest.mark.parametrize("kind, match", [
+        ("truncated", r"line \d+ is not valid JSON"),
+        ("bad_header", "header"),
+        ("schema_v99", "schema 99"),
+        ("empty", "empty event log"),
+    ])
+    def test_loader_raises_value_error(self, corrupt, kind, match):
+        with pytest.raises(ValueError, match=match):
+            EventReplayer.load(corrupt(kind))
+
+    @pytest.mark.parametrize("kind", ["truncated", "bad_header",
+                                      "schema_v99", "empty"])
+    @pytest.mark.parametrize("cmd", ["summary", "reconcile"])
+    def test_cli_one_line_error_exit_2(self, corrupt, kind, cmd):
+        rc, out, err = run_cli([cmd, str(corrupt(kind))])
+        assert rc == 2
+        assert err.startswith("error:")
+        assert len(err.strip().splitlines()) == 1
+        assert "Traceback" not in err + out
+
+    def test_cleanly_cut_log_fails_each_consumer_its_own_way(
+            self, corrupt):
+        """A log with the RunCompleted line removed parses fine, so
+        summary refuses it as unusable (exit 2) while reconcile audits
+        it as a FAIL (exit 1) — there is no recorded total to trust."""
+        bad = str(corrupt("no_summary"))
+        rc, _, err = run_cli(["summary", bad])
+        assert rc == 2
+        assert "RunCompleted" in err
+        rc, out, _ = run_cli(["reconcile", bad])
+        assert rc == 1
+        assert "FAIL" in out and "no RunCompleted" in out
+
+    def test_missing_file_exit_2(self, tmp_path):
+        rc, _, err = run_cli(["summary", str(tmp_path / "nope.jsonl")])
+        assert rc == 2
+        assert err.startswith("error:")
+
+    def test_error_names_the_file_and_line(self, corrupt):
+        bad = corrupt("truncated")
+        _, _, err = run_cli(["summary", str(bad)])
+        assert bad.name in err
+        n_lines = len(bad.read_text().splitlines())
+        assert f"line {n_lines}" in err
+
+    @pytest.mark.parametrize("kind", ["truncated", "schema_v99"])
+    def test_replay_result_raises_value_error(self, corrupt, kind):
+        with pytest.raises(ValueError):
+            replay_result(corrupt(kind))
+
+    @pytest.mark.parametrize("kind", ["truncated", "bad_header",
+                                      "schema_v99"])
+    def test_fig4_fig5_replay_exit_cleanly(self, corrupt, kind):
+        """The benchmark reporters' --replay path turns loader errors
+        into a one-line SystemExit, not a raw traceback."""
+        from benchmarks.fig4_timeline import main as fig4_main
+        from benchmarks.fig5_costs import main as fig5_main
+        bad = str(corrupt(kind))
+        for entry in (fig4_main, fig5_main):
+            with pytest.raises(SystemExit) as exc:
+                entry(["--replay", bad])
+            assert str(exc.value.code).startswith("error:")
+
+
+# ---------------------------------------------------------------------------
+# The read-only eventlog helpers the CLI is built on.
+# ---------------------------------------------------------------------------
+class TestEventlogHelpers:
+    @pytest.mark.parametrize("trace", GOLDEN_TRACES, ids=GOLDEN_IDS)
+    def test_read_header_matches_replayer(self, trace):
+        assert read_header(trace) == EventReplayer.load(trace).header
+
+    @pytest.mark.parametrize("trace", GOLDEN_TRACES, ids=GOLDEN_IDS)
+    def test_iter_events_matches_replayer_stream(self, trace):
+        streamed = list(iter_events(trace))
+        loaded = EventReplayer.load(trace).events
+        assert len(streamed) == len(loaded)
+        assert [type(e) for e in streamed] == [type(e) for e in loaded]
+        assert [e.t for e in streamed] == [e.t for e in loaded]
+
+    def test_iter_events_is_lazy(self, tmp_path):
+        """A corrupt tail only raises once iteration reaches it."""
+        good = (GOLDEN_DIR / "golden__spot.events.jsonl").read_text()
+        lines = good.splitlines()
+        lines[-1] = "{broken"
+        p = tmp_path / "tail.events.jsonl"
+        p.write_text("\n".join(lines))
+        it = iter_events(p)
+        first = next(it)
+        assert first.t >= 0.0
+        with pytest.raises(ValueError, match="not valid JSON"):
+            list(it)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark --report integration.
+# ---------------------------------------------------------------------------
+class TestBenchmarkReportFlag:
+    def test_table1_report_requires_record_dir(self):
+        from benchmarks.table1 import main as table1_main
+        with pytest.raises(SystemExit) as exc:
+            table1_main(["--report"])
+        assert exc.value.code == 2
+
+    def test_table1_report_prints_breakdowns(self, tmp_path, capsys):
+        from benchmarks.table1 import main as table1_main
+        table1_main(["--row", "MNIST", "--record-dir", str(tmp_path),
+                     "--report"])
+        out = capsys.readouterr().out
+        traces = sorted(tmp_path.glob("*.events.jsonl"))
+        assert traces, "runs must be recorded"
+        assert out.count("client,compute_usd") == len(traces)
+        for p in traces:
+            assert p.name in out
+            assert reconcile_path(p).ok
