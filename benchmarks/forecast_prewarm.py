@@ -95,7 +95,8 @@ def register_policies(threshold_per_hr: float = 2.0) -> Dict[str, Policy]:
         "forecast_prewarm", pick_cheapest_zone=True,
         on_warning="checkpoint",
         strategies=(ForecastPrewarmSpec(
-            hazard_threshold_per_hr=threshold_per_hr, poll_s=30.0),)),
+            hazard_threshold_per_hr=threshold_per_hr, poll_s=30.0,
+            oracle=True),)),
         overwrite=True)
     return {"reactive_ckpt": reactive, "forecast_prewarm": forecast}
 

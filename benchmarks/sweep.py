@@ -31,17 +31,28 @@ Flags (documented in benchmarks/README.md):
                         gate)
   --report              ranking tables for every metric + the pointer
                         to the per-trace audit CLI (repro.cloud.report)
+  --audit               record every cell's event stream and replay
+                        each through the dollar-exact reconciler
+                        (repro.cloud.report); exit nonzero naming the
+                        cell and its first divergent event on any
+                        mismatch
+  --audit-dir DIR       keep the recorded audit traces under DIR
+                        (default: a temporary directory, deleted after
+                        the audit)
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import shutil
+import tempfile
 from pathlib import Path
 from typing import Optional, Sequence
 
 from repro.sweep import build_grid, run_sweep
 from repro.sweep.report import build_report, dumps, ranking_table
 from repro.sweep.runner import METRICS
-from repro.sweep.spec import MARKETS
+from repro.sweep.spec import MARKETS, ScenarioSpec
 from repro.cloud.preemption import MODEL_NAMES
 
 DEFAULT_POLICIES = ("on_demand", "spot", "fedcostaware")
@@ -69,6 +80,27 @@ def assert_crunch_win(report: dict) -> None:
     print(f"# crunch win: fedcostaware {f['mean']:.4f} "
           f"[{f['ci_lo']:.4f}, {f['ci_hi']:.4f}] < spot {s['mean']:.4f} "
           f"[{s['ci_lo']:.4f}, {s['ci_hi']:.4f}] (CIs disjoint)")
+
+
+def audit_cells(specs: Sequence[ScenarioSpec]) -> None:
+    """Replay every recorded cell trace through the dollar-exact
+    reconciler (`repro.cloud.report.reconcile_path`). A Monte-Carlo
+    mean is only as trustworthy as each settled cell behind it, so one
+    divergent cell fails the whole sweep — the exit names the cell's
+    grid coordinates and the first event at which its category folds
+    disagreed."""
+    from repro.cloud.report import RECONCILE_TOL, reconcile_path
+    failures = []
+    for s in specs:
+        rec = reconcile_path(s.trace_path())
+        if not rec.ok:
+            failures.append(f"{s.cell_slug()}: {rec.first_divergence}")
+    if failures:
+        raise SystemExit(
+            f"audit failed for {len(failures)}/{len(specs)} cells:\n  "
+            + "\n  ".join(failures))
+    print(f"# audit: {len(specs)}/{len(specs)} cells reconciled "
+          f"dollar-exact (tol {RECONCILE_TOL:.0e})")
 
 
 def main(argv: Optional[Sequence[str]] = None):
@@ -107,12 +139,30 @@ def main(argv: Optional[Sequence[str]] = None):
                     help="print the ranking table for every metric "
                          "(not just --metric) plus the pointer to the "
                          "per-trace audit CLI, repro.cloud.report")
+    ap.add_argument("--audit", action="store_true",
+                    help="record every cell and replay it through the "
+                         "dollar-exact reconciler; nonzero exit naming "
+                         "the cell and first divergent event on any "
+                         "mismatch")
+    ap.add_argument("--audit-dir", metavar="DIR", default=None,
+                    help="keep the recorded audit traces under DIR "
+                         "(default: a temporary directory deleted "
+                         "after the audit)")
     args = ap.parse_args(argv)
 
     specs = build_grid(args.policies, args.markets,
                        seeds=range(args.seeds), models=args.models,
                        n_clients=args.clients, n_epochs=args.epochs,
                        engines=args.engines)
+    audit_tmp = None
+    if args.audit:
+        audit_dir = args.audit_dir
+        if audit_dir is None:
+            audit_tmp = tempfile.mkdtemp(prefix="sweep_audit_")
+            audit_dir = audit_tmp
+        Path(audit_dir).mkdir(parents=True, exist_ok=True)
+        specs = [dataclasses.replace(s, record_dir=str(audit_dir))
+                 for s in specs]
     engines_part = (f" x {len(args.engines)} engines"
                     if args.engines else "")
     print(f"# sweep: {len(specs)} cells "
@@ -133,6 +183,12 @@ def main(argv: Optional[Sequence[str]] = None):
               "trends/reconcile` (docs/reporting.md)")
     else:
         print(ranking_table(report, metric=args.metric))
+    if args.audit:
+        try:
+            audit_cells(specs)
+        finally:
+            if audit_tmp is not None:
+                shutil.rmtree(audit_tmp, ignore_errors=True)
     if args.assert_crunch_win:
         assert_crunch_win(report)
     return report

@@ -11,7 +11,9 @@ Multi-FedLS record-then-audit discipline):
   summary    per-client / per-provider / per-zone spend split into
              compute, checkpoint-storage and update-egress categories,
              plus idle-time, preemption and lost-work columns rebuilt
-             from the recorded Fig-4 state stream
+             from the recorded Fig-4 state stream; `--per-round` adds
+             dollars bucketed by the round window open at settlement
+             time (RoundStarted -> RoundCompleted)
   trends     cost / makespan / preemption trajectories across every
              trace in a directory (deterministic sorted-key JSON or a
              CSV-style table)
@@ -41,8 +43,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 from repro.core.events import (BillingTick, CheckpointBilled,
                                ClientCheckpointed, ClientLost,
                                ClientStateChanged, ClientUpdateSent,
-                               EventBus, FleetStepSummary, RunCompleted,
-                               TransferBilled)
+                               EventBus, FleetStepSummary, RoundCompleted,
+                               RoundStarted, RunCompleted, TransferBilled)
 from repro.core.eventlog import iter_events, read_header
 
 # the provider every legacy single-provider log implicitly ran on
@@ -221,6 +223,97 @@ def render_summary(payload: Dict[str, Any]) -> str:
     lines.append("zone,compute_usd,egress_usd")
     for z, row in payload["per_zone"].items():
         lines.append(f"{z},{row['compute']:.6f},{row['egress']:.6f}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# per-round attribution — which round the money settled in.
+# ---------------------------------------------------------------------------
+def per_round_rows(path: Union[str, Path]) -> List[Dict[str, Any]]:
+    """Per-round cost attribution: every settled dollar bucketed by
+    the round window open at its settlement time.
+
+    A `RoundStarted` opens round `round_idx`; its `RoundCompleted`
+    closes it. Settlements (`BillingTick`, `CheckpointBilled`,
+    `TransferBilled`, fleet `FleetStepSummary.cost_delta`) landing
+    between the two attribute to that round. Under the async engines
+    round windows overlap — a settlement inside several open windows
+    attributes to the *most recently started* one (the round the money
+    is actually buying progress for). Settlements outside every window
+    — the initial spin-up before round 0 and the tail after the last
+    aggregation — land in the `"-"` row, so the rows always sum back
+    to the trace total (the `summary` reconciliation invariant holds
+    per-round too).
+    """
+    path = Path(path)
+    open_rounds: List[int] = []     # stack: most recently started last
+    acc: Dict[Optional[int], Dict[str, float]] = defaultdict(
+        lambda: {"compute": 0.0, "checkpoint": 0.0, "egress": 0.0})
+    window: Dict[int, Dict[str, Any]] = {}
+
+    def bucket() -> Optional[int]:
+        return open_rounds[-1] if open_rounds else None
+
+    for ev in iter_events(path):
+        if isinstance(ev, RoundStarted):
+            open_rounds.append(ev.round_idx)
+            window[ev.round_idx] = {"t_start": ev.t, "t_end": None,
+                                    "participants": len(ev.participants)}
+        elif isinstance(ev, RoundCompleted):
+            if ev.round_idx in open_rounds:
+                open_rounds.remove(ev.round_idx)
+            w = window.setdefault(
+                ev.round_idx,
+                {"t_start": ev.t,
+                 "participants": len(ev.participants)})
+            w["t_end"] = ev.t
+        elif isinstance(ev, BillingTick):
+            acc[bucket()]["compute"] += ev.amount
+        elif isinstance(ev, CheckpointBilled):
+            acc[bucket()]["checkpoint"] += ev.amount
+        elif isinstance(ev, TransferBilled):
+            acc[bucket()]["egress"] += ev.amount
+        elif isinstance(ev, FleetStepSummary):
+            acc[bucket()]["compute"] += ev.cost_delta
+
+    rows: List[Dict[str, Any]] = []
+    for idx in sorted(window):
+        w, a = window[idx], acc.get(idx) or {
+            "compute": 0.0, "checkpoint": 0.0, "egress": 0.0}
+        rows.append({
+            "round": idx, "t_start_s": w["t_start"],
+            "t_end_s": w["t_end"], "participants": w["participants"],
+            "compute": a["compute"], "checkpoint": a["checkpoint"],
+            "egress": a["egress"],
+            "total": a["compute"] + a["checkpoint"] + a["egress"]})
+    out = acc.get(None)
+    if out is not None:
+        rows.append({
+            "round": None, "t_start_s": None, "t_end_s": None,
+            "participants": 0, "compute": out["compute"],
+            "checkpoint": out["checkpoint"], "egress": out["egress"],
+            "total": (out["compute"] + out["checkpoint"]
+                      + out["egress"])})
+    return rows
+
+
+def render_per_round(trace: str, rows: List[Dict[str, Any]]) -> str:
+    """The `summary --per-round` CSV block: one row per round window
+    plus the `-` outside-round bucket, fixed float formats (CI diffs
+    the bytes)."""
+    lines = [f"# per-round attribution: {trace} (dollars by "
+             f"settlement-time round window; '-' = outside any round)",
+             "round,t_start_s,t_end_s,participants,compute_usd,"
+             "checkpoint_usd,egress_usd,total_usd"]
+    for r in rows:
+        idx = "-" if r["round"] is None else str(r["round"])
+        t0 = ("-" if r["t_start_s"] is None
+              else f"{r['t_start_s']:.1f}")
+        t1 = "-" if r["t_end_s"] is None else f"{r['t_end_s']:.1f}"
+        lines.append(
+            f"{idx},{t0},{t1},{r['participants']},"
+            f"{r['compute']:.6f},{r['checkpoint']:.6f},"
+            f"{r['egress']:.6f},{r['total']:.6f}")
     return "\n".join(lines)
 
 
@@ -481,10 +574,20 @@ def _dumps(obj: Any) -> str:
 
 def _cmd_summary(args) -> int:
     payloads = [summarize_path(p) for p in args.traces]
+    if args.per_round:
+        for p, path in zip(payloads, args.traces):
+            p["per_round"] = per_round_rows(path)
     if args.json:
         print(_dumps(payloads))
     else:
-        print("\n\n".join(render_summary(p) for p in payloads))
+        blocks = []
+        for p in payloads:
+            block = render_summary(p)
+            if args.per_round:
+                block += "\n" + render_per_round(p["trace"],
+                                                 p["per_round"])
+            blocks.append(block)
+        print("\n\n".join(blocks))
     return 0
 
 
@@ -541,6 +644,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="recorded .events.jsonl trace path(s)")
     p.add_argument("--json", action="store_true",
                    help="emit sorted-key JSON instead of the table")
+    p.add_argument("--per-round", action="store_true",
+                   help="append per-round cost attribution: dollars "
+                        "settled inside each RoundStarted -> "
+                        "RoundCompleted window, split into compute / "
+                        "checkpoint / egress")
     p.set_defaults(func=_cmd_summary)
 
     p = sub.add_parser("trends",

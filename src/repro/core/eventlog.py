@@ -72,8 +72,20 @@ from repro.core.events import EVENT_TYPES, Event, EventBus
 #        unchanged, and runs without comms modeling (the default:
 #        `FLRunConfig.update_payload_mb=None`, zero egress rates)
 #        record streams identical to v6 apart from the header.
-SCHEMA_VERSION = 7
-SUPPORTED_SCHEMAS = (1, 2, 3, 4, 5, 6, 7)
+#   v8 — learned-forecast vocabulary (the `repro.forecast` subsystem):
+#        ForecastUpdated (one per forecast poll per tracked training
+#        spot client: predicted interruption probability + hazard,
+#        learned price band, running Brier/coverage calibration, and
+#        the cost-of-error action chosen). Headers may additionally
+#        carry `hazard_source` ("oracle" | "observable" | "mixed")
+#        naming which hazard signal the run's strategies actually
+#        consulted — absent when none did. Purely additive — v1–v7
+#        logs (golden copies under tests/golden/v1..v7) replay
+#        unchanged, and runs without a learned-forecast strategy (the
+#        default policies) record streams identical to v7 apart from
+#        the header.
+SCHEMA_VERSION = 8
+SUPPORTED_SCHEMAS = (1, 2, 3, 4, 5, 6, 7, 8)
 
 _SCALARS = (bool, int, float, str)
 

@@ -309,6 +309,35 @@ class FleetStepSummary(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class ForecastUpdated(Event):
+    """One learned-forecast evaluation for a tracked training spot
+    client (schema v8, the `repro.forecast` subsystem). Published by
+    `LearnedForecastStrategy` once per poll: the predicted
+    interruption probability over `horizon_s` (`p_interrupt`, from
+    `hazard_per_hr`), the learned price band (`price_lo` / `price_mid`
+    / `price_hi`; zeros when the forecaster does not model prices),
+    the running calibration metrics (`brier`, `coverage`; -1.0 before
+    their first resolution) and the cost-of-error `action` chosen
+    ("hold" / "prewarm" / "release" / "checkpoint" /
+    "prewarm+checkpoint" / "drain"). Only published when a policy
+    composes the learned strategy — default event streams carry none,
+    keeping golden traces unmoved."""
+    client: str
+    provider: str = ""
+    zone: str = ""
+    forecaster: str = ""
+    horizon_s: float = 0.0
+    p_interrupt: float = 0.0
+    hazard_per_hr: float = 0.0
+    price_lo: float = 0.0
+    price_mid: float = 0.0
+    price_hi: float = 0.0
+    brier: float = -1.0
+    coverage: float = -1.0
+    action: str = "hold"
+
+
+@dataclasses.dataclass(frozen=True)
 class RunCompleted(Event):
     """Terminal event carrying the run summary.
 
@@ -336,7 +365,7 @@ EVENT_TYPES: Dict[str, Type[Event]] = {
         ClientResumedFromCheckpoint, RoundStarted, RoundCompleted,
         ClientStateChanged, BudgetExhausted, ClientScreenedOut,
         DirectiveIssued, CheckpointBilled, ClientUpdateSent,
-        TransferBilled, FleetStepSummary, RunCompleted,
+        TransferBilled, FleetStepSummary, ForecastUpdated, RunCompleted,
     )
 }
 

@@ -17,8 +17,12 @@ compositions of `SchedulingStrategy` components (`repro.core.strategy`).
 Each policy names the `RoundEngine` implementation that owns its round
 semantics (see `repro.fl.engines`) and the strategy components that own
 its scheduling decisions; both plug in without touching engine or cloud
-internals. `register_policy` adds beyond-paper compositions (e.g. a
-forecast-pre-warming variant) under new names.
+internals. `register_policy` adds beyond-paper compositions under new
+names — e.g. the oracle/observable forecast-pre-warming variants
+(`benchmarks/forecast_prewarm.py`) or the learned-forecast composition
+(`repro.forecast.register_learned_policy`, whose strategy lives
+entirely outside this package yet plugs into `Policy.strategies` like
+any core spec).
 
 Legacy boolean construction — `Policy(name, on_demand,
 manage_lifecycle, enforce_budgets, pick_cheapest_zone)` — still works:

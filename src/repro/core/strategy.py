@@ -30,12 +30,16 @@ everything Listing-1-shaped lives behind the strategy components:
   BudgetScreen            wraps §III-E budget screening
   WarningReaction         the preemption-notice machinery (checkpoint /
                           drain) formerly hard-coded in the engines
-  ForecastPrewarmStrategy beyond-paper: watches the price-coupled
-                          reclaim hazard (`repro.cloud.preemption`) and
-                          pre-warms a standby replacement *before* the
-                          expected interruption burst, closing the
-                          spin-up gap entirely (ROADMAP item) — with
-                          zero engine or cloud edits
+  ForecastPrewarmStrategy beyond-paper: watches a reclaim hazard —
+                          the true model's (`oracle=True`) or the
+                          tenant-observable price-derived estimate
+                          (`oracle=False`) — and pre-warms a standby
+                          replacement *before* the expected
+                          interruption burst, closing the spin-up gap
+                          entirely (ROADMAP item) — with zero engine
+                          or cloud edits. Its fully learned successor,
+                          `repro.forecast.LearnedForecastStrategy`,
+                          plugs into the same API from outside core.
 
 Table-I policies are declarative compositions of these components
 (`repro.core.policies`); new disciplines plug in as new strategies (or
@@ -50,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import (Any, Callable, Dict, List, Mapping, Optional,
                     Sequence, Tuple)
 
@@ -178,16 +183,38 @@ class ForecastPrewarmSpec(StrategySpec):
     """Interruption-forecast pre-warming: pre-warm a standby
     replacement whenever the client's reclaim hazard (events/hour)
     crosses `hazard_threshold_per_hr`; release it once the hazard falls
-    below `release_below_per_hr` (default: half the threshold)."""
+    below `release_below_per_hr` (default: half the threshold).
+
+    `oracle` names the hazard signal explicitly: True thresholds the
+    *true* preemption-model hazard (`ctx.hazard_of` — a signal no real
+    tenant can read; it silently degrades to the observable estimate
+    when the driving model exposes no hazard, e.g. interruption
+    replay), False thresholds the tenant-observable price-derived
+    estimate (`ctx.observable_hazard_of`, routed through the run's
+    `ObservableFeed`). Leaving it unset keeps the historical oracle
+    behavior but raises a `DeprecationWarning` — compositions must now
+    say which side of the oracle/observable line they stand on."""
     hazard_threshold_per_hr: float = 2.0
     poll_s: float = 30.0
     release_below_per_hr: Optional[float] = None
+    oracle: Optional[bool] = None
 
     def build(self, policy) -> "SchedulingStrategy":
         """A `ForecastPrewarmStrategy` with this spec's thresholds."""
+        oracle = self.oracle
+        if oracle is None:
+            warnings.warn(
+                "ForecastPrewarmSpec without an explicit oracle= flag "
+                "defaults to oracle=True, thresholding the true "
+                "preemption-model hazard no real tenant can observe; "
+                "pass oracle=True to keep that deliberately, or "
+                "oracle=False for the observable price-derived signal "
+                "(repro.forecast.ObservableFeed)",
+                DeprecationWarning, stacklevel=2)
+            oracle = True
         return ForecastPrewarmStrategy(
             self.hazard_threshold_per_hr, self.poll_s,
-            self.release_below_per_hr)
+            self.release_below_per_hr, oracle=oracle)
 
 
 # ---------------------------------------------------------------------------
@@ -212,7 +239,16 @@ class StrategyContext:
     spot_price_of: Callable[[str], float] = lambda c: 0.0
     spend_of: Callable[[str], float] = lambda c: 0.0
     hazard_of: Callable[[str], float] = lambda c: 0.0
+    # tenant-observable hazard estimate (events/hour), routed through
+    # the run's ObservableFeed — what oracle=False strategies threshold
+    observable_hazard_of: Callable[[str], float] = lambda c: 0.0
+    # $ one checkpoint write of size_mb costs on `provider` (the
+    # provider's StorageRates, wired by the composition root)
+    ckpt_cost_of: Callable[[str, float], float] = lambda p, mb: 0.0
     is_shutdown: Callable[[], bool] = lambda: False
+    # the run's repro.forecast.ObservableFeed (held as Any: the core
+    # layer never imports forecast); None on paths that don't wire one
+    feed: Any = None
     ckpt_store: Any = None
     executor: Any = None                 # repro.fl.cluster.DirectiveExecutor
     view: Any = None                     # engine adapter (attached later)
@@ -420,14 +456,21 @@ class WarningReaction(SchedulingStrategy):
 
 
 class ForecastPrewarmStrategy(SchedulingStrategy):
-    """Interruption-forecast pre-warming (ROADMAP): watch the reclaim
-    hazard the preemption model exposes (`ctx.hazard_of`, wired to
-    `PriceCoupledModel.hazard` when that model drives the run) and
-    pre-warm a *standby* replacement before the expected interruption
-    burst. When the reclaim lands, the standby is promoted instead of
-    a cold re-request — the spin-up gap collapses to ~0. Once the
-    hazard falls back below the release threshold, an unused standby
-    is cancelled so quiet market stretches cost nothing extra.
+    """Interruption-forecast pre-warming (ROADMAP): watch a reclaim
+    hazard and pre-warm a *standby* replacement before the expected
+    interruption burst. When the reclaim lands, the standby is
+    promoted instead of a cold re-request — the spin-up gap collapses
+    to ~0. Once the hazard falls back below the release threshold, an
+    unused standby is cancelled so quiet market stretches cost nothing
+    extra.
+
+    `oracle=True` thresholds the true-model hazard (`ctx.hazard_of`,
+    wired to `PriceCoupledModel.hazard` when that model drives the
+    run); `oracle=False` thresholds the tenant-observable
+    price-derived estimate (`ctx.observable_hazard_of`, the
+    `repro.forecast.ObservableFeed` signal). The fully *learned*
+    alternative — no hazard formula at all — is
+    `repro.forecast.LearnedForecastStrategy`.
 
     Lives entirely outside `fl/engines/` and `cloud/`: it only reads
     context callables and answers with `SpinUp` / `Terminate`
@@ -436,12 +479,14 @@ class ForecastPrewarmStrategy(SchedulingStrategy):
 
     def __init__(self, hazard_threshold_per_hr: float = 2.0,
                  poll_s: float = 30.0,
-                 release_below_per_hr: Optional[float] = None):
+                 release_below_per_hr: Optional[float] = None,
+                 oracle: bool = True):
         self.threshold = hazard_threshold_per_hr
         self.poll_s = poll_s
         self.release = (release_below_per_hr
                         if release_below_per_hr is not None
                         else hazard_threshold_per_hr / 2.0)
+        self.oracle = oracle
 
     def bind(self, ctx: StrategyContext) -> None:
         """Start the hazard polling loop on the simulator clock."""
@@ -454,6 +499,8 @@ class ForecastPrewarmStrategy(SchedulingStrategy):
         ctx = self.ctx
         if ctx.is_shutdown():
             return
+        hazard_of = ctx.hazard_of if self.oracle \
+            else ctx.observable_hazard_of
         directives: List[Directive] = []
         for c in ctx.clients:
             inst = ctx.instance_of(c)
@@ -467,11 +514,11 @@ class ForecastPrewarmStrategy(SchedulingStrategy):
             training = (ctx.view is not None
                         and ctx.view.is_training(c))
             if tracked_spot and training and standby is None:
-                if ctx.hazard_of(c) >= self.threshold:
+                if hazard_of(c) >= self.threshold:
                     directives.append(SpinUp(c))
             elif standby is not None:
                 if (not tracked_spot or not training
-                        or ctx.hazard_of(c) < self.release):
+                        or hazard_of(c) < self.release):
                     directives.append(Terminate(c, standby=True))
         if directives:
             ctx.executor.apply(directives)

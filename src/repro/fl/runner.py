@@ -60,6 +60,7 @@ from repro.core.policies import Policy, get_policy, make_scheduler
 from repro.core.strategy import StrategyContext, StrategyStack
 from repro.fl.cluster import ClusterManager, DirectiveExecutor
 from repro.fl.engines import EngineContext, get_engine
+from repro.forecast.feed import ObservableFeed
 from repro.fl.fleet import FleetRunner, fleet_supported
 from repro.fl.telemetry import Segment, TimelineRecorder
 from repro.fl.types import RunResult, TrainerHooks
@@ -132,6 +133,7 @@ class FLCloudRunner:
             self.scheduler = None
             self.cluster = None
             self.executor = None
+            self.feed = None
             self.strategies = None
             self.timeline = None
             self.engine = None
@@ -154,7 +156,6 @@ class FLCloudRunner:
                 "seed": seed, "n_epochs": run_cfg.n_epochs,
                 "clients": [c.name for c in run_cfg.clients]})
         self.sim = CloudSimulator(self.cloud_cfg, seed=seed, bus=self.bus)
-        self._hazard_estimator = None   # lazy price-coupled fallback
         self.accountant = CostAccountant(self.bus, self.sim.market,
                                          clock=lambda: self.sim.now)
         # the FedCostAware decision core (estimator + ledger): shared
@@ -175,6 +176,14 @@ class FLCloudRunner:
             self.cluster, ckpt_store=self.ckpt_store,
             ckpt_size_mb=self.sched_cfg.warning_ckpt_size_mb,
             trace=run_cfg.trace_directives)
+        # the tenant-observable market surface (repro.forecast):
+        # learned strategies attach their predictors here, and the
+        # observable hazard fallback below routes through it. Built
+        # after every simulator/accounting subscription so its pure
+        # observer handlers run last and cannot reorder anything.
+        self.feed = ObservableFeed.for_market(
+            self.sim.market, self.cloud_cfg.preemption_rate_per_hr,
+            bus=self.bus)
         self.strategies = StrategyStack.from_policy(
             self.policy, StrategyContext(
                 policy=self.policy, sched=self.scheduler,
@@ -188,7 +197,12 @@ class FLCloudRunner:
                 spot_price_of=self.cluster.spot_price_of,
                 spend_of=self.accountant.client_cost,
                 hazard_of=self._hazard_of,
+                observable_hazard_of=self._observable_hazard_of,
+                ckpt_cost_of=lambda provider, mb: (
+                    self.sim.market.provider_of(provider)
+                    .storage.checkpoint_cost(mb)),
                 is_shutdown=lambda: self.cluster.is_shutdown,
+                feed=self.feed,
                 ckpt_store=self.ckpt_store,
                 executor=self.executor))
         self.hooks = hooks
@@ -250,28 +264,52 @@ class FLCloudRunner:
         return mode
 
     # ------------------------------------------------------------------
+    def _stamp_hazard_source(self, source: str) -> None:
+        """Record which hazard signal the run's strategies actually
+        consulted in the trace header (`hazard_source`: "oracle" |
+        "observable" | "mixed"). Stamped lazily on first use, so runs
+        whose strategies never poll a hazard — every default policy —
+        record headers without the key, byte-identical to before."""
+        if self.recorder is None:
+            return
+        prev = self.recorder.header.get("hazard_source")
+        if prev is None:
+            self.recorder.header["hazard_source"] = source
+        elif prev != source:
+            self.recorder.header["hazard_source"] = "mixed"
+
+    def _observable_hazard_of(self, client: str) -> float:
+        """The tenant-observable reclaim-hazard estimate (events/hour)
+        for the client's tracked spot instance right now; 0 when
+        untracked or on-demand. Routed through the run's
+        `ObservableFeed` (`repro.forecast`): the price-derived
+        price-coupled formula evaluated on published prices — how a
+        real scheduler reads an interruption forecast off the market,
+        with no model internals involved."""
+        inst = self.cluster.instance_of(client)
+        if inst is None or inst.on_demand:
+            return 0.0
+        self._stamp_hazard_source("observable")
+        return self.feed.price_derived_hazard(
+            inst.provider, inst.zone, self.sim.now) * 3600.0
+
     def _hazard_of(self, client: str) -> float:
-        """The reclaim hazard (events/hour) forecast for the client's
+        """The *oracle* reclaim hazard (events/hour) for the client's
         tracked spot instance right now; 0 when untracked or
         on-demand. Uses the driving preemption model's own hazard when
         it exposes one (`PriceCoupledModel`); otherwise — e.g. under
         recorded-interruption replay, where the true reclaim times are
-        not observable in advance — it *estimates* the hazard from the
-        observable spot price via the same price-coupled formula,
-        which is how a real scheduler would read an interruption
-        forecast off the market. This is the signal
-        `ForecastPrewarmStrategy` pre-warms standbys on."""
+        not observable in advance — it falls back to the observable
+        estimate, and the recorded trace header says so
+        (`hazard_source: "observable"`) instead of silently
+        substituting."""
         inst = self.cluster.instance_of(client)
         if inst is None or inst.on_demand:
             return 0.0
         hazard = getattr(self.sim.preemption_model, "hazard", None)
         if hazard is None:
-            if self._hazard_estimator is None:
-                from repro.cloud.preemption import PriceCoupledModel
-                self._hazard_estimator = PriceCoupledModel(
-                    self.sim.market,
-                    self.cloud_cfg.preemption_rate_per_hr)
-            hazard = self._hazard_estimator.hazard
+            return self._observable_hazard_of(client)
+        self._stamp_hazard_source("oracle")
         return hazard(inst.provider, inst.zone, self.sim.now) * 3600.0
 
     # ------------------------------------------------------------------

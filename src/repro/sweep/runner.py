@@ -41,7 +41,9 @@ def run_cell(spec: ScenarioSpec) -> Dict[str, float]:
     """One deterministic run at the spec's coordinates -> metric dict
     (plain floats, picklable). The run seed and the scenario seed are
     both `spec.seed`: each Monte-Carlo repetition re-draws the client
-    jitter *and* the adversarial market weather."""
+    jitter *and* the adversarial market weather. A spec with
+    `record_dir` set also persists the cell's event stream to
+    `spec.trace_path()` for the sweep's `--audit` reconciliation."""
     from repro.fl.runner import FLCloudRunner  # deferred: worker import
     cloud = CloudConfig(
         market=market_config(spec.market, spec.seed),
@@ -50,7 +52,8 @@ def run_cell(spec: ScenarioSpec) -> Dict[str, float]:
     cfg = FLRunConfig(dataset="sweep", clients=_clients(spec),
                       n_epochs=spec.n_epochs, policy=spec.policy,
                       engine=(spec.engine or None), seed=spec.seed)
-    res = FLCloudRunner(cfg, cloud_cfg=cloud).run()
+    res = FLCloudRunner(cfg, cloud_cfg=cloud,
+                        record_to=spec.trace_path()).run()
     return {
         "cost": float(res.total_cost),
         "makespan_s": float(res.makespan_s),

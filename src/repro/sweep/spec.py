@@ -16,6 +16,7 @@ adversarial weather*, which is exactly what the bootstrap CIs need.
 from __future__ import annotations
 
 import dataclasses
+from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 from repro.common.config import (MarketConfig, ProviderConfig,
@@ -58,6 +59,23 @@ class ScenarioSpec:
     # fedcostaware_async stays async); "sync" / "async_buffered" pin it
     # regardless of policy — the sweep's engine axis
     engine: str = ""
+    # when non-empty, the cell run records its full event stream to
+    # `<record_dir>/<cell_slug>.events.jsonl` — what `sweep --audit`
+    # replays through the dollar-exact reconciler
+    record_dir: str = ""
+
+    def cell_slug(self) -> str:
+        """Filesystem-safe cell identity: the grid coordinates joined
+        in grid order, naming audit traces and audit failures."""
+        return (f"{self.policy}__{self.market}__{self.preemption_model}"
+                f"__{self.engine or 'default'}__s{self.seed}")
+
+    def trace_path(self) -> Optional[Path]:
+        """Where this cell records its event stream (None when the
+        sweep is not recording)."""
+        if not self.record_dir:
+            return None
+        return Path(self.record_dir) / f"{self.cell_slug()}.events.jsonl"
 
 
 def market_config(name: str, seed: int) -> MarketConfig:

@@ -22,8 +22,8 @@ README = (REPO / "benchmarks" / "README.md").read_text()
 
 # every script that parses flags via argparse main(argv)
 ARGPARSE_SCRIPTS = ["table1", "fig4_timeline", "fig5_costs", "multicloud",
-                    "preemption_realism", "forecast_prewarm", "scaling",
-                    "sweep"]
+                    "preemption_realism", "forecast_prewarm",
+                    "forecast_quality", "scaling", "sweep"]
 _FLAG = re.compile(r"(--[a-z][a-z0-9-]*)")
 
 

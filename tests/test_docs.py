@@ -50,6 +50,12 @@ PUBLIC_MODULES = [
     "src/repro/comms/payload.py",
     "src/repro/comms/channel.py",
     "src/repro/comms/billing.py",
+    "src/repro/forecast/__init__.py",
+    "src/repro/forecast/feed.py",
+    "src/repro/forecast/predictors.py",
+    "src/repro/forecast/calibration.py",
+    "src/repro/forecast/decision.py",
+    "src/repro/forecast/strategy.py",
     "src/repro/checkpoint/store.py",
     "src/repro/checkpoint/snapshots.py",
 ]
@@ -59,7 +65,7 @@ MARKDOWN_FILES = ["README.md", "benchmarks/README.md",
                   "docs/index.md", "docs/architecture.md",
                   "docs/events.md", "docs/markets.md",
                   "docs/sweep.md", "docs/training.md",
-                  "docs/reporting.md"]
+                  "docs/reporting.md", "docs/forecasting.md"]
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,7 @@ from repro.cloud.preemption import (ConstantRateModel,
 from repro.cloud.pricing import SpotMarket
 from repro.common.config import (ClientProfile, CloudConfig, FLRunConfig,
                                  PopulationConfig, SchedulerConfig)
-from repro.core.eventlog import EventReplayer
+from repro.core.eventlog import SCHEMA_VERSION, EventReplayer
 from repro.fl.runner import FLCloudRunner
 from repro.fl.telemetry import replay_result
 
@@ -206,7 +206,7 @@ class TestRecordReplay:
         schema-v6 `client_cost_delta` attribution (the v5 bug: fleet
         replays silently reported every per-client cost as zero)."""
         live, blob = self._record()
-        assert '"schema": 7' in blob.splitlines()[0]
+        assert f'"schema": {SCHEMA_VERSION}' in blob.splitlines()[0]
         rep = replay_result(EventReplayer.loads(blob))
         assert rep.total_cost == pytest.approx(live.total_cost, abs=1e-9)
         assert rep.rounds_completed == live.rounds_completed

@@ -1,0 +1,393 @@
+"""Unit tests for the online forecasting subsystem (repro.forecast):
+the observable feed, both predictors, the calibration tracker, the
+cost-of-error decision rule, and the strategy/policy wiring."""
+import dataclasses
+import math
+import warnings
+
+import pytest
+
+from repro.core.events import (EVENT_TYPES, EventBus, ForecastUpdated,
+                               InstancePreempted,
+                               InstancePreemptionWarning)
+from repro.core.policies import POLICIES
+from repro.core.strategy import ForecastPrewarmSpec
+from repro.forecast import (CalibrationTracker, DecisionConfig,
+                            HazardEwmaForecaster, LearnedForecastSpec,
+                            LearnedForecastStrategy, ObservableFeed,
+                            QuantileForecaster, decide, make_forecaster,
+                            register_learned_policy)
+
+
+@dataclasses.dataclass
+class FakeInstance:
+    provider: str = "aws"
+    zone: str = "z1"
+    on_demand: bool = False
+
+
+class Recorder:
+    """Observer that logs every forwarded observation."""
+
+    def __init__(self):
+        self.prices = []
+        self.reclaims = []
+
+    def observe_price(self, provider, zone, t, price):
+        self.prices.append((provider, zone, t, price))
+
+    def observe_reclaim(self, provider, zone, t):
+        self.reclaims.append((provider, zone, t))
+
+
+def make_feed(bus=None, price=0.30, mean=0.30, sensitivity=16.0,
+              base_rate_per_hr=1.0):
+    return ObservableFeed(
+        spot_price_of=lambda p, z, t: price,
+        mean_price_of=lambda p, z: mean,
+        sensitivity_of=lambda p: sensitivity,
+        base_rate_per_hr=base_rate_per_hr, bus=bus)
+
+
+class TestObservableFeed:
+    def test_sample_price_forwards_and_dedups(self):
+        feed = make_feed()
+        obs = feed.attach(Recorder())
+        assert feed.sample_price("aws", "z1", 10.0) == 0.30
+        feed.sample_price("aws", "z1", 10.0)   # same tick: dropped
+        feed.sample_price("aws", "z1", 5.0)    # non-advancing: dropped
+        feed.sample_price("aws", "z1", 40.0)
+        feed.sample_price("aws", "z2", 10.0)   # other zone: separate
+        assert obs.prices == [("aws", "z1", 10.0, 0.30),
+                              ("aws", "z1", 40.0, 0.30),
+                              ("aws", "z2", 10.0, 0.30)]
+
+    def test_spot_reclaims_forwarded_on_demand_skipped(self):
+        bus = EventBus()
+        feed = make_feed(bus=bus)
+        obs = feed.attach(Recorder())
+        bus.publish(InstancePreempted(100.0, instance=FakeInstance()))
+        bus.publish(InstancePreempted(
+            200.0, instance=FakeInstance(on_demand=True)))
+        assert obs.reclaims == [("aws", "z1", 100.0)]
+        assert feed.n_reclaims_seen == 1
+
+    def test_warnings_counted_not_forwarded(self):
+        """A provider notice precedes its reclaim; forwarding both
+        would double-count the event for the hazard estimators."""
+        bus = EventBus()
+        feed = make_feed(bus=bus)
+        obs = feed.attach(Recorder())
+        bus.publish(InstancePreemptionWarning(
+            90.0, instance=FakeInstance(), reclaim_at=210.0))
+        assert obs.reclaims == []
+        assert feed.n_warnings_seen == 1
+
+    def test_price_derived_hazard_matches_coupled_formula(self):
+        """The feed reproduces PriceCoupledModel.hazard from
+        observable quantities: base/3600 * max(0, 1 + s*(p/ref - 1))."""
+        feed = make_feed(price=0.45, mean=0.30, sensitivity=16.0,
+                         base_rate_per_hr=1.0)
+        expected = (1.0 / 3600.0) * (1.0 + 16.0 * (0.45 / 0.30 - 1.0))
+        assert feed.price_derived_hazard("aws", "z1", 0.0) == \
+            pytest.approx(expected)
+
+    def test_price_derived_hazard_clamps_to_zero(self):
+        feed = make_feed(price=0.10, mean=0.30, sensitivity=16.0)
+        assert feed.price_derived_hazard("aws", "z1", 0.0) == 0.0
+
+    def test_zero_base_rate_means_zero_hazard(self):
+        feed = make_feed(base_rate_per_hr=0.0)
+        assert feed.price_derived_hazard("aws", "z1", 0.0) == 0.0
+
+
+class TestHazardEwma:
+    def test_prior_before_any_reclaim(self):
+        f = HazardEwmaForecaster(base_rate_per_hr=0.7)
+        assert f.hazard_per_hr("aws", "z1", 100.0) == 0.7
+
+    def test_single_gap_sets_hazard(self):
+        f = HazardEwmaForecaster()
+        f.observe_price("aws", "z1", 0.0, 0.30)   # anchors first-seen
+        f.observe_reclaim("aws", "z1", 1800.0)    # gap 1800s
+        assert f.hazard_per_hr("aws", "z1", 1800.0) == \
+            pytest.approx(3600.0 / 1800.0)
+
+    def test_ewma_blends_gaps(self):
+        f = HazardEwmaForecaster(alpha=0.5)
+        f.observe_price("aws", "z1", 0.0, 0.30)
+        f.observe_reclaim("aws", "z1", 1000.0)    # ewma = 1000
+        f.observe_reclaim("aws", "z1", 3000.0)    # gap 2000 -> 1500
+        assert f.hazard_per_hr("aws", "z1", 0.0) == \
+            pytest.approx(3600.0 / 1500.0)
+
+    def test_zones_independent(self):
+        f = HazardEwmaForecaster(base_rate_per_hr=0.2)
+        f.observe_price("aws", "z1", 0.0, 0.30)
+        f.observe_reclaim("aws", "z1", 100.0)
+        assert f.hazard_per_hr("aws", "z2", 100.0) == 0.2
+
+    def test_rejects_bad_alpha(self):
+        with pytest.raises(ValueError):
+            HazardEwmaForecaster(alpha=0.0)
+
+    def test_interruption_probability_survival(self):
+        f = HazardEwmaForecaster(base_rate_per_hr=2.0)
+        p = f.interruption_probability("aws", "z1", 0.0, 1800.0)
+        assert p == pytest.approx(1.0 - math.exp(-1.0))
+        assert f.interruption_probability("aws", "z1", 0.0, 0.0) == 0.0
+
+
+class TestQuantileForecaster:
+    def test_requires_median(self):
+        with pytest.raises(ValueError):
+            QuantileForecaster(taus=(0.1, 0.9))
+
+    def test_quantiles_init_to_first_price(self):
+        f = QuantileForecaster()
+        assert f.price_quantiles("aws", "z1") is None
+        f.observe_price("aws", "z1", 0.0, 0.30)
+        assert f.price_quantiles("aws", "z1") == \
+            {0.1: 0.30, 0.5: 0.30, 0.9: 0.30}
+
+    def test_quantiles_spread_under_varied_prices(self):
+        f = QuantileForecaster(lr=0.05)
+        prices = [0.28, 0.32, 0.30, 0.34, 0.26, 0.31, 0.29, 0.33] * 30
+        for i, p in enumerate(prices):
+            f.observe_price("aws", "z1", 30.0 * i, p)
+        q = f.price_quantiles("aws", "z1")
+        assert q[0.1] < q[0.5] < q[0.9]
+
+    def test_spike_regime_raises_hazard(self):
+        """Calm exposure with zero reclaims drives the calm hazard
+        below the prior; spike reclaims drive the spike hazard above
+        it — and the reported hazard follows the current regime."""
+        f = QuantileForecaster(lr=0.01, base_rate_per_hr=1.0,
+                               prior_weight=1.0)
+        t = 0.0
+        for _ in range(120):            # one calm hour at 0.30
+            f.observe_price("aws", "z1", t, 0.30)
+            t += 30.0
+        calm_hazard = f.hazard_per_hr("aws", "z1", t)
+        assert calm_hazard < 1.0        # evidence pushed below prior
+        f.observe_price("aws", "z1", t, 0.45)   # spike sample
+        assert f._zones[("aws", "z1")].regime == "spike"
+        f.observe_reclaim("aws", "z1", t)
+        f.observe_reclaim("aws", "z1", t + 1.0)
+        spike_hazard = f.hazard_per_hr("aws", "z1", t)
+        assert spike_hazard > calm_hazard
+        assert spike_hazard > 1.0
+
+    def test_miscalibrate_swaps_regimes(self):
+        cfg = dict(lr=0.01, base_rate_per_hr=1.0, prior_weight=1.0)
+        good = QuantileForecaster(**cfg)
+        bad = QuantileForecaster(miscalibrate=True, **cfg)
+        for f in (good, bad):
+            t = 0.0
+            for _ in range(120):
+                f.observe_price("aws", "z1", t, 0.30)
+                t += 30.0
+            f.observe_price("aws", "z1", t, 0.45)
+            f.observe_reclaim("aws", "z1", t)
+        # same evidence, opposite answers in the spike regime
+        assert bad.hazard_per_hr("aws", "z1", 0.0) < \
+            good.hazard_per_hr("aws", "z1", 0.0)
+
+    def test_exposure_attributed_to_previous_regime(self):
+        """The interval (last_t, t] was spent at the *previous* price
+        level, so its exposure belongs to that regime even when the
+        new sample flips it."""
+        f = QuantileForecaster(lr=0.01)
+        f.observe_price("aws", "z1", 0.0, 0.30)
+        f.observe_price("aws", "z1", 3600.0, 0.45)  # flips to spike
+        z = f._zones[("aws", "z1")]
+        assert z.exposure_h["calm"] == pytest.approx(1.0)
+        assert z.exposure_h["spike"] == 0.0
+
+    def test_factory(self):
+        assert make_forecaster("ewma").name == "ewma"
+        assert make_forecaster("quantile").name == "quantile"
+        with pytest.raises(ValueError):
+            make_forecaster("arima")
+
+
+class TestCalibrationTracker:
+    def test_brier_unresolved_is_sentinel(self):
+        c = CalibrationTracker()
+        assert c.brier() == -1.0
+        assert c.coverage() == -1.0
+
+    def test_reclaim_resolves_with_outcome_one(self):
+        c = CalibrationTracker(horizon_s=600.0)
+        c.note_prediction("aws", "z1", 0.0, 0.8)
+        c.observe_reclaim("aws", "z1", 300.0)
+        assert c.n_resolved() == 1
+        assert c.brier() == pytest.approx((0.8 - 1.0) ** 2)
+
+    def test_expiry_resolves_with_outcome_zero(self):
+        c = CalibrationTracker(horizon_s=600.0)
+        c.note_prediction("aws", "z1", 0.0, 0.8)
+        c.advance(601.0)
+        assert c.brier() == pytest.approx(0.8 ** 2)
+
+    def test_late_reclaim_does_not_resolve_expired_question(self):
+        c = CalibrationTracker(horizon_s=600.0)
+        c.note_prediction("aws", "z1", 0.0, 0.5)
+        c.advance(601.0)                      # resolves 0
+        c.observe_reclaim("aws", "z1", 700.0)  # nothing left to resolve
+        assert c.n_resolved() == 1
+
+    def test_other_zone_reclaim_ignored(self):
+        c = CalibrationTracker(horizon_s=600.0)
+        c.note_prediction("aws", "z1", 0.0, 0.5)
+        c.observe_reclaim("aws", "z2", 100.0)
+        assert c.n_resolved() == 0
+
+    def test_band_coverage(self):
+        c = CalibrationTracker()
+        c.note_band("aws", "z1", 0.25, 0.35)
+        c.observe_price("aws", "z1", 30.0, 0.30)   # hit
+        c.note_band("aws", "z1", 0.25, 0.35)
+        c.observe_price("aws", "z1", 60.0, 0.45)   # miss
+        assert c.coverage() == pytest.approx(0.5)
+
+    def test_unbanded_price_not_scored(self):
+        c = CalibrationTracker()
+        c.observe_price("aws", "z1", 30.0, 0.30)
+        assert c.coverage() == -1.0
+
+
+class TestDecisionRule:
+    CFG = DecisionConfig(horizon_s=600.0, stall_weight=3.0,
+                         prewarm_hysteresis=0.5, drain_threshold=0.95)
+
+    def kwargs(self, **over):
+        base = dict(p=0.0, spot_rate_hr=0.45, spin_up_s=450.0,
+                    lost_work_s=0.0, unsnapshotted_s=0.0, ckpt_usd=0.01,
+                    standby_active=False, have_fresh_snapshot=False,
+                    cfg=self.CFG)
+        base.update(over)
+        return base
+
+    def test_prewarm_threshold(self):
+        """Break-even at p*(spin_up*stall + lost) = (1-p)*horizon:
+        with 450*3 vs 600 the threshold is p = 600/1950 ~ 0.3077."""
+        lo = decide(**self.kwargs(p=0.30))
+        hi = decide(**self.kwargs(p=0.32))
+        assert not lo.prewarm and hi.prewarm
+
+    def test_rate_cancels_from_prewarm_decision(self):
+        a = decide(**self.kwargs(p=0.32, spot_rate_hr=0.45))
+        b = decide(**self.kwargs(p=0.32, spot_rate_hr=4.5))
+        assert a.prewarm and b.prewarm
+        assert b.expected_loss_usd == pytest.approx(
+            10.0 * a.expected_loss_usd)
+
+    def test_release_hysteresis(self):
+        """An active standby survives until the expected loss falls
+        below half the standby cost — no flapping at the boundary."""
+        hold = decide(**self.kwargs(p=0.20, standby_active=True))
+        release = decide(**self.kwargs(p=0.05, standby_active=True))
+        assert not hold.release and not hold.prewarm
+        assert release.release
+
+    def test_checkpoint_economics(self):
+        """Snapshot fires iff expected redone-work dollars exceed the
+        all-in write cost."""
+        skip = decide(**self.kwargs(p=0.1, unsnapshotted_s=100.0,
+                                    ckpt_usd=0.01))
+        fire = decide(**self.kwargs(p=0.1, unsnapshotted_s=2000.0,
+                                    ckpt_usd=0.01))
+        assert not skip.checkpoint and fire.checkpoint
+
+    def test_nothing_unsnapshotted_no_checkpoint(self):
+        d = decide(**self.kwargs(p=0.99, unsnapshotted_s=0.0,
+                                 have_fresh_snapshot=True))
+        assert not d.checkpoint
+
+    def test_drain_needs_certainty_and_snapshot(self):
+        no_snap = decide(**self.kwargs(p=0.99))
+        ready = decide(**self.kwargs(p=0.99,
+                                     have_fresh_snapshot=True))
+        uncertain = decide(**self.kwargs(p=0.90,
+                                         have_fresh_snapshot=True))
+        assert not no_snap.drain
+        assert ready.drain
+        assert not uncertain.drain
+
+    def test_action_labels(self):
+        assert decide(**self.kwargs()).action == "hold"
+        assert decide(**self.kwargs(p=0.5)).action == "prewarm"
+        assert decide(**self.kwargs(
+            p=0.5, unsnapshotted_s=2000.0)).action == \
+            "prewarm+checkpoint"
+        assert decide(**self.kwargs(
+            p=0.99, have_fresh_snapshot=True)).action == "drain"
+        assert decide(**self.kwargs(
+            p=0.0, standby_active=True)).action == "release"
+
+    def test_p_clamped(self):
+        assert decide(**self.kwargs(p=1.7)).expected_loss_usd == \
+            decide(**self.kwargs(p=1.0)).expected_loss_usd
+        assert decide(**self.kwargs(p=-0.3)).action == "hold"
+
+
+class TestStrategyWiring:
+    def test_implicit_oracle_deprecation_warning(self):
+        """ForecastPrewarmSpec without an explicit oracle flag keeps
+        the privileged behaviour but now says so loudly."""
+        spec = ForecastPrewarmSpec()
+        with pytest.warns(DeprecationWarning):
+            strat = spec.build(policy=None)
+        assert strat.oracle is True
+
+    @pytest.mark.parametrize("oracle", [True, False])
+    def test_explicit_oracle_flag_is_silent(self, oracle):
+        spec = ForecastPrewarmSpec(oracle=oracle)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            strat = spec.build(policy=None)
+        assert strat.oracle is oracle
+
+    def test_bind_requires_feed(self):
+        strat = LearnedForecastSpec().build(policy=None)
+        ctx = _min_ctx(feed=None)
+        with pytest.raises(ValueError, match="feed"):
+            strat.bind(ctx)
+
+    def test_spec_builds_configured_predictor(self):
+        s = LearnedForecastSpec(forecaster="ewma", ewma_alpha=0.4,
+                                prior_rate_per_hr=0.9)
+        f = s.make_forecaster()
+        assert f.name == "ewma"
+        assert f.alpha == 0.4 and f.base_rate_per_hr == 0.9
+        q = LearnedForecastSpec(miscalibrate=True).make_forecaster()
+        assert q.name == "quantile" and q.miscalibrate
+
+    def test_register_learned_policy(self):
+        pol = register_learned_policy("tmp_learned", poll_s=12.0)
+        try:
+            assert POLICIES["tmp_learned"] is pol
+            assert isinstance(pol.strategies[0], LearnedForecastSpec)
+            assert pol.strategies[0].poll_s == 12.0
+            assert pol.on_warning == "checkpoint"
+            built = pol.strategies[0].build(pol)
+            assert isinstance(built, LearnedForecastStrategy)
+        finally:
+            POLICIES.pop("tmp_learned", None)
+
+    def test_forecast_updated_registered_for_replay(self):
+        assert EVENT_TYPES["ForecastUpdated"] is ForecastUpdated
+        ev = ForecastUpdated(12.0, client="a", p_interrupt=0.4,
+                             action="prewarm")
+        assert ev.brier == -1.0 and ev.coverage == -1.0
+
+
+def _min_ctx(**over):
+    """The smallest StrategyContext a bind() test needs."""
+    from repro.core.strategy import StrategyContext
+    base = dict(policy=None, sched=None, sched_cfg=None,
+                bus=EventBus(), now=lambda: 0.0,
+                schedule_in=lambda d, fn: None, clients=("a",))
+    base.update(over)
+    return StrategyContext(**base)

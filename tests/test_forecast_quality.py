@@ -1,0 +1,138 @@
+"""Pins for benchmarks/forecast_quality.py: the learned forecaster's
+cost must land strictly between the reactive baseline and the oracle,
+the deliberately miscalibrated forecaster must measurably lose money,
+and the recorded hazard-source header must say which signal each
+policy consulted."""
+import pytest
+
+from benchmarks.forecast_prewarm import (CLIENTS, SCHED, spiky_market,
+                                         DEFAULT_TRACE_DIR)
+from benchmarks.forecast_quality import POLICY_NAMES, compare
+from repro.common.config import CloudConfig, FLRunConfig
+from repro.core.policies import POLICIES, Policy, register_policy
+from repro.core.strategy import ForecastPrewarmSpec
+from repro.fl.runner import FLCloudRunner
+
+ORACLE_SLACK = 0.25
+
+
+@pytest.fixture(scope="module")
+def results():
+    return compare()
+
+
+class TestForecastQualityClaims:
+    def test_scenario_exercises_reclaims(self, results):
+        for name in POLICY_NAMES:
+            assert results[name]["n_preemptions"] > 0
+
+    def test_learned_beats_reactive(self, results):
+        assert results["learned_forecast"]["total_cost"] < \
+            results["reactive_ckpt"]["total_cost"]
+
+    def test_learned_approaches_oracle_without_beating_it(self, results):
+        learned = results["learned_forecast"]["total_cost"]
+        oracle = results["oracle_prewarm"]["total_cost"]
+        assert oracle <= learned <= oracle * (1.0 + ORACLE_SLACK)
+
+    def test_miscalibration_loses_money(self, results):
+        assert results["miscalibrated_forecast"]["total_cost"] > \
+            results["learned_forecast"]["total_cost"]
+
+    def test_learned_shrinks_spinup_gap_between_extremes(self, results):
+        """The learned policy misses the first burst (still ignorant)
+        but pre-warms later ones: its stall gap lands strictly between
+        the oracle's and the reactive baseline's."""
+        assert results["oracle_prewarm"]["spinup_gap_s"] < \
+            results["learned_forecast"]["spinup_gap_s"] < \
+            results["reactive_ckpt"]["spinup_gap_s"]
+
+    def test_all_policies_complete_the_run(self, results):
+        rounds = {results[n]["rounds_completed"] for n in POLICY_NAMES}
+        assert rounds == {8}
+
+    def test_benchmark_main_asserts_pass(self):
+        from benchmarks.forecast_quality import main
+        out = main([])
+        assert set(out) == set(POLICY_NAMES)
+
+
+class TestCalibrationTelemetry:
+    def test_learned_policies_publish_forecasts(self, results):
+        assert results["learned_forecast"]["n_forecasts"] > 0
+        assert results["miscalibrated_forecast"]["n_forecasts"] > 0
+        assert results["reactive_ckpt"]["n_forecasts"] == 0
+        assert results["oracle_prewarm"]["n_forecasts"] == 0
+
+    def test_brier_tracks_the_money(self, results):
+        """The dollars ordering is explained by the calibration
+        ordering: the miscalibrated forecaster scores strictly worse."""
+        good = results["learned_forecast"]["brier"]
+        bad = results["miscalibrated_forecast"]["brier"]
+        assert 0.0 <= good < bad
+
+    def test_band_coverage_resolved(self, results):
+        cov = results["learned_forecast"]["coverage"]
+        assert 0.5 <= cov <= 1.0
+
+
+def _run(policy: str, n_epochs: int = 2,
+         preemption_model: str = "replay"):
+    cloud = CloudConfig(spot_rate_sigma=0.0, spin_up_sigma=0.0,
+                        spin_up_mean_s=450.0,
+                        preemption_model=preemption_model,
+                        preemption_rate_per_hr=1.0,
+                        market=spiky_market(DEFAULT_TRACE_DIR))
+    cfg = FLRunConfig(dataset="hazard_source", clients=CLIENTS,
+                      n_epochs=n_epochs, policy=policy, seed=0)
+    r = FLCloudRunner(cfg, cloud_cfg=cloud, sched_cfg=SCHED, record=True)
+    r.run()
+    return r.recorder.header
+
+
+class TestHazardSourceHeader:
+    """The replay fallback is now explicit in the recorded trace: the
+    header names which hazard signal the run's strategies consulted."""
+
+    def register(self, name: str, oracle: bool) -> None:
+        register_policy(Policy(
+            name, pick_cheapest_zone=True, on_warning="checkpoint",
+            strategies=(ForecastPrewarmSpec(
+                hazard_threshold_per_hr=2.0, poll_s=30.0,
+                oracle=oracle),)), overwrite=True)
+
+    def test_oracle_polling_stamps_oracle(self):
+        """With a live price-coupled model the oracle strategy reads
+        the model's own hazard — and the trace says so."""
+        self.register("tmp_hazard_oracle", oracle=True)
+        try:
+            header = _run("tmp_hazard_oracle",
+                          preemption_model="price_coupled")
+            assert header["hazard_source"] == "oracle"
+        finally:
+            POLICIES.pop("tmp_hazard_oracle", None)
+
+    def test_oracle_under_replay_degrades_to_observable(self):
+        """Under recorded-interruption replay the model holds no
+        hazard; the oracle strategy silently received the price-derived
+        estimate before — now the trace records that substitution."""
+        self.register("tmp_hazard_oracle_replay", oracle=True)
+        try:
+            header = _run("tmp_hazard_oracle_replay")
+            assert header["hazard_source"] == "observable"
+        finally:
+            POLICIES.pop("tmp_hazard_oracle_replay", None)
+
+    def test_observable_polling_stamps_observable(self):
+        self.register("tmp_hazard_obs", oracle=False)
+        try:
+            header = _run("tmp_hazard_obs")
+            assert header["hazard_source"] == "observable"
+        finally:
+            POLICIES.pop("tmp_hazard_obs", None)
+
+    def test_no_hazard_consulted_no_header_key(self):
+        """Policies that never poll a hazard leave the header alone —
+        which is what keeps regenerated goldens byte-compatible."""
+        header = _run("fedcostaware")
+        assert "hazard_source" not in header

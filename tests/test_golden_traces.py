@@ -37,6 +37,7 @@ GOLDEN_V3_DIR = GOLDEN_DIR / "v3"
 GOLDEN_V4_DIR = GOLDEN_DIR / "v4"
 GOLDEN_V5_DIR = GOLDEN_DIR / "v5"
 GOLDEN_V6_DIR = GOLDEN_DIR / "v6"
+GOLDEN_V7_DIR = GOLDEN_DIR / "v7"
 FIXTURE_PRICES = Path(__file__).parent / "fixtures" / "prices"
 
 CLOUD = CloudConfig(spot_rate_sigma=0.0)
@@ -49,10 +50,10 @@ POLICIES = ("fedcostaware", "spot", "fedcostaware_async")
 # (drift + live-vs-replay coverage): the three single-provider policies
 # plus the cross-provider trace-market run
 TRACES = tuple(f"golden__{p}" for p in POLICIES) + ("golden__multicloud",)
-# the fleet-path golden (schema v7, FleetStepSummary aggregates with
-# client_cost_delta attribution): the only engine mode with no
-# per-instance events, exercised by its own replay/live-vs-replay
-# tests — archived version dirs (v1..v6) predate it
+# the fleet-path golden (introduced at schema v7, FleetStepSummary
+# aggregates with client_cost_delta attribution): the only engine mode
+# with no per-instance events, exercised by its own
+# replay/live-vs-replay tests — archived version dirs v1..v6 predate it
 FLEET_TRACE = "golden__fleet"
 ALL_TRACES = TRACES + (FLEET_TRACE,)
 
@@ -317,26 +318,26 @@ class TestGoldenReplay:
 
 # ---------------------------------------------------------------------------
 # Cross-version compat matrix. Every archived golden under
-# tests/golden/v1..v6 plus the current (v7) mains must (a) load with
+# tests/golden/v1..v7 plus the current (v8) mains must (a) load with
 # its recorded schema, (b) replay to the pinned dollars, and (c)
 # differ from the next version's archive by the header line alone —
 # every schema bump so far has been additive (v2 additionally stamped
 # the provider key onto instance snapshots, handled below). Growing to
-# schema v8 means archiving the v7 goldens under tests/golden/v7 and
+# schema v9 means archiving the v8 goldens under tests/golden/v8 and
 # appending one `SCHEMA_DIRS` row — not writing a new class.
 # ---------------------------------------------------------------------------
 SCHEMA_DIRS = {1: GOLDEN_V1_DIR, 2: GOLDEN_V2_DIR, 3: GOLDEN_V3_DIR,
                4: GOLDEN_V4_DIR, 5: GOLDEN_V5_DIR, 6: GOLDEN_V6_DIR,
-               SCHEMA_VERSION: GOLDEN_DIR}
+               7: GOLDEN_V7_DIR, SCHEMA_VERSION: GOLDEN_DIR}
 
 
 def archived_traces(version: int) -> tuple:
     """The trace set archived for a schema version: v1 predates the
     multi-cloud market (no multicloud golden), and the fleet golden
-    exists only at the current version."""
+    joined at v7."""
     base = (tuple(f"golden__{p}" for p in POLICIES) if version == 1
             else TRACES)
-    extra = (FLEET_TRACE,) if version == SCHEMA_VERSION else ()
+    extra = (FLEET_TRACE,) if version >= 7 else ()
     return base + (FED_ISIC_TRACE,) + extra
 
 
@@ -347,7 +348,7 @@ TOTALS_MATRIX = [(v, name) for v in SCHEMA_DIRS
 # adjacent-version equivalence pairs (older, trace): compared against
 # version older+1 over the traces archived at the older version
 PAIR_MATRIX = [(v, name) for v in SCHEMA_DIRS if v < SCHEMA_VERSION
-               for name in archived_traces(v) if name != FLEET_TRACE]
+               for name in archived_traces(v)]
 
 
 class TestSchemaCompatMatrix:

@@ -354,3 +354,80 @@ def test_cost_report_audits_any_recorded_run(epoch_times, policy, seed,
                                              abs=1e-9)
     assert rec.ok, rec.first_divergence
     assert abs(rec.delta) <= 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Forecasting subsystem invariants (repro.forecast).
+# ---------------------------------------------------------------------------
+_obs_event = st.tuples(
+    st.sampled_from(["price", "reclaim"]),
+    st.floats(0.05, 2.0),          # price level (ignored by reclaims)
+)
+
+
+@given(st.sampled_from(["ewma", "quantile"]),
+       st.lists(_obs_event, min_size=1, max_size=80),
+       st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_forecaster_determinism(kind, events, seed):
+    """Identically-constructed forecasters fed the identical
+    observation stream answer identically — no hidden randomness, so
+    recorded runs replay bit-for-bit."""
+    from repro.forecast import make_forecaster
+    a = make_forecaster(kind, seed=seed)
+    b = make_forecaster(kind, seed=seed)
+    t = 0.0
+    for what, price in events:
+        t += 30.0
+        for f in (a, b):
+            if what == "price":
+                f.observe_price("aws", "z1", t, price)
+            else:
+                f.observe_reclaim("aws", "z1", t)
+    assert a.hazard_per_hr("aws", "z1", t) == \
+        b.hazard_per_hr("aws", "z1", t)
+    assert a.interruption_probability("aws", "z1", t, 600.0) == \
+        b.interruption_probability("aws", "z1", t, 600.0)
+    assert a.price_quantiles("aws", "z1") == \
+        b.price_quantiles("aws", "z1")
+
+
+@given(st.floats(120.0, 7200.0), st.floats(0.05, 0.6),
+       st.integers(30, 120))
+@settings(max_examples=40, deadline=None)
+def test_ewma_hazard_converges_to_true_rate(gap_s, alpha, n):
+    """Perfectly regular reclaims with gap g drive the EWMA hazard to
+    exactly 3600/g — the estimator is consistent on its own model."""
+    from repro.forecast import HazardEwmaForecaster
+    f = HazardEwmaForecaster(base_rate_per_hr=0.1, alpha=alpha)
+    f.observe_price("aws", "z1", 0.0, 0.30)
+    for i in range(1, n + 1):
+        f.observe_reclaim("aws", "z1", i * gap_s)
+    assert f.hazard_per_hr("aws", "z1", n * gap_s) == \
+        pytest.approx(3600.0 / gap_s, rel=1e-6)
+
+
+@given(st.integers(0, 10_000), st.floats(0.02, 0.08),
+       st.floats(0.01, 0.05))
+@settings(max_examples=15, deadline=None)
+def test_quantile_band_coverage_on_ou_prices(seed, sigma, lr):
+    """On a synthetic Ornstein-Uhlenbeck price stream the learned
+    (0.1, 0.9) band, scored online by the CalibrationTracker exactly
+    as the strategy scores it, covers roughly its nominal 80% mass —
+    well away from both the degenerate 0 and the vacuous 1."""
+    from repro.forecast import CalibrationTracker, QuantileForecaster
+    rng = np.random.default_rng(seed)
+    mu, theta, dt = 0.40, 0.05, 1.0
+    f = QuantileForecaster(lr=lr)
+    cal = CalibrationTracker()
+    x = mu
+    for i in range(1500):
+        x += theta * (mu - x) * dt + sigma * math.sqrt(dt) * \
+            rng.standard_normal()
+        x = max(x, 0.01)
+        q = f.price_quantiles("aws", "z1")
+        if q is not None and i > 500:     # score after burn-in only
+            cal.note_band("aws", "z1", q[0.1], q[0.9])
+            cal.observe_price("aws", "z1", 30.0 * i, x)
+        f.observe_price("aws", "z1", 30.0 * i, x)
+    assert 0.5 <= cal.coverage() <= 0.98

@@ -154,7 +154,7 @@ class TestDirectives:
         assert isinstance(wr, WarningReaction) and wr.mode == "drain"
         assert WarningReactionSpec(mode="checkpoint").build(p).mode == \
             "checkpoint"
-        assert isinstance(ForecastPrewarmSpec().build(p),
+        assert isinstance(ForecastPrewarmSpec(oracle=True).build(p),
                           ForecastPrewarmStrategy)
 
     def test_default_streams_carry_no_directive_events(self):
